@@ -1,0 +1,26 @@
+"""Fig. 6 analogue: total energy vs execution time per (schedule, freq).
+
+Validated paper claims (EXPERIMENTS.md cites the row names below):
+  * in-cache size: fastest == most energy-efficient, RM wins;
+  * memory-bound sizes: frequency raises energy disproportionately to the
+    time saved for RM (memory system saturated), while MO keeps gaining;
+  * the memory ("DRAM") energy component is small next to compute+static
+    ("package") and nearly constant across frequencies.
+"""
+from __future__ import annotations
+
+from .common import FREQS, matmul_model
+
+
+def run():
+    rows = []
+    for size in (10, 11, 12):
+        for sched in ("rowmajor", "morton"):
+            for fname, fs in FREQS.items():
+                m = matmul_model(size, sched, chips=8, f_scale=fs)
+                rows.append((
+                    f"fig6_energy/{sched}/n=2^{size}/{fname}",
+                    m["time"] * 1e6,
+                    f"E_total_J={m['total']:.3f};E_core_J={m['core']:.3f};"
+                    f"E_hbm_J={m['hbm']:.3f};E_static_J={m['static']:.3f}"))
+    return rows

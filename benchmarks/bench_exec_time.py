@@ -1,0 +1,79 @@
+"""Table IV analogue: execution time of RM/MO/HO matmul.
+
+Two parts:
+(a) MEASURED on this CPU: jitted index-translation kernels (the paper's
+    per-element cost RM < MO < HO) and an element-order-layout matmul
+    (gather overhead of the paper-faithful element orderings).
+(b) MODELLED for TPU v5e: blocked matmul time per (schedule, size, freq,
+    chips) from the LRU-simulated traffic -- the Table IV grid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.curves import hilbert_encode, morton_encode
+from repro.core.layout import element_permutation
+
+from .common import FREQS, matmul_model, timeit
+
+
+def _index_kernels(n=1 << 10):
+    idx = jnp.arange(n * n, dtype=jnp.uint32)
+    y, x = idx // n, idx % n
+
+    rm = jax.jit(lambda y, x: y * n + x)
+    mo = jax.jit(lambda y, x: morton_encode(y, x))
+    ho = jax.jit(lambda y, x: hilbert_encode(y, x, 10))
+    rows = []
+    for name, fn in (("rowmajor", rm), ("morton", mo), ("hilbert", ho)):
+        t = timeit(fn, y, x)
+        rows.append((f"index_translate/{name}/n=2^10", t * 1e6,
+                     f"per_elem_ns={t / (n * n) * 1e9:.3f}"))
+    return rows
+
+
+def _element_layout_matmul(n=256):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    rows = []
+    base = None
+    for sched in ("rowmajor", "morton", "hilbert"):
+        perm = jnp.asarray(element_permutation(n, sched))
+        inv = jnp.argsort(perm)
+
+        @jax.jit
+        def mm(a_lin, b_lin, inv=inv, perm=perm):
+            # consume curve-linearised storage: gather back to 2-D, dot,
+            # store result in curve order (paper-faithful data path)
+            a2 = a_lin[inv.reshape(n, n)]
+            b2 = b_lin[inv.reshape(n, n)]
+            c = a2 @ b2
+            return c.reshape(-1)[perm]
+
+        a_lin = a.reshape(-1)[perm]
+        b_lin = b.reshape(-1)[perm]
+        t = timeit(mm, a_lin, b_lin)
+        if base is None:
+            base = t
+        rows.append((f"element_layout_matmul/{sched}/n={n}", t * 1e6,
+                     f"vs_rm={t / base:.2f}x"))
+    return rows
+
+
+def run():
+    rows = _index_kernels()
+    rows += _element_layout_matmul()
+    # Table IV grid (modelled, single "socket" = 1 chip and 16 chips)
+    for size in (10, 11, 12):
+        for sched in ("rowmajor", "morton", "hilbert"):
+            for fname, fs in FREQS.items():
+                for chips in (1, 16):
+                    m = matmul_model(size, sched, chips=chips, f_scale=fs)
+                    rows.append((
+                        f"tableIV_model/{sched}/n=2^{size}/{fname}/"
+                        f"c{chips}", m["time"] * 1e6,
+                        f"traffic_GB={m['traffic'] / 1e9:.2f}"))
+    return rows

@@ -1,0 +1,21 @@
+"""Fig. 5 analogue: RM speedup vs clock frequency per problem size.
+
+Paper claim: for the in-cache size the speedup tracks frequency linearly;
+once memory-bound, raising the clock past the memory clock buys little.
+"""
+from __future__ import annotations
+
+from .common import FREQS, matmul_model
+
+
+def run():
+    rows = []
+    for size in (10, 11, 12):
+        t_base = matmul_model(size, "rowmajor", f_scale=FREQS["1.2GHz"],
+                              chips=16)["time"]
+        for fname, fs in FREQS.items():
+            t = matmul_model(size, "rowmajor", f_scale=fs, chips=16)["time"]
+            rows.append((
+                f"fig5_rm_speedup/n=2^{size}/{fname}", t * 1e6,
+                f"speedup_vs_1.2GHz={t_base / t:.2f}"))
+    return rows

@@ -1,0 +1,36 @@
+"""Beyond-paper: HBM traffic of the Pallas kernel's actual reuse
+mechanisms per schedule.
+
+Pallas elides the HBM->VMEM DMA only when consecutive grid steps map to
+the same block ("consecutive" model); the multi-slot VMEM cache variant
+behaves like a small LRU.  This benchmark quantifies what each schedule
+buys under each mechanism -- the data behind the kernel-design choices in
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from repro.core.locality import matmul_hbm_traffic
+from repro.core.schedule import grid_schedule
+
+from .common import BLOCK, DTYPE_BYTES
+
+
+def run():
+    rows = []
+    g, kt = 16, 16
+    bb = BLOCK * BLOCK * DTYPE_BYTES
+    blocks = {"A": bb, "B": bb, "C": bb}
+    for sched in ("rowmajor", "boustrophedon", "morton", "hilbert",
+                  "peano", "supertile"):
+        order = grid_schedule(sched, g, g)
+        for model, cap in (("consecutive", 0), ("lru", 4 * kt),
+                           ("lru", 8 * kt)):
+            m = matmul_hbm_traffic(order, kt, blocks, model=model,
+                                   capacity=cap)
+            tag = model if model == "consecutive" else f"lru{cap}"
+            rows.append((
+                f"kernel_traffic/{sched}/{tag}",
+                m["total_bytes"] / 1e6,
+                f"read_MB={m['read_bytes'] / 1e6:.1f};"
+                f"misses={m['misses']}"))
+    return rows

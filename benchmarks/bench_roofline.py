@@ -1,0 +1,21 @@
+"""§Roofline feed: per-cell roofline terms from the dry-run artifacts."""
+from __future__ import annotations
+
+from repro.launch.roofline import load_records, roofline_row
+
+
+def run():
+    rows = []
+    for rec in load_records():
+        r = roofline_row(rec)
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            r["t_compute"] * 1e6,
+            f"t_mem_us={r['t_memory'] * 1e6:.0f};"
+            f"t_coll_us={r['t_collective'] * 1e6:.0f};"
+            f"bottleneck={r['bottleneck']};"
+            f"frac={r['roofline_fraction']:.3f}"))
+    if not rows:
+        rows.append(("roofline/no_artifacts", 0.0,
+                     "run python -m repro.launch.dryrun --sweep first"))
+    return rows

@@ -1,0 +1,17 @@
+"""Fig. 4 analogue: parallel speedup per ordering scheme vs chip count."""
+from __future__ import annotations
+
+from .common import matmul_model
+
+
+def run():
+    rows = []
+    for size in (10, 11, 12):
+        for sched in ("rowmajor", "morton", "hilbert"):
+            t1 = matmul_model(size, sched, chips=1)["time"]
+            for chips in (1, 4, 8, 16):
+                tc = matmul_model(size, sched, chips=chips)["time"]
+                rows.append((
+                    f"fig4_speedup/{sched}/n=2^{size}/c{chips}",
+                    tc * 1e6, f"speedup={t1 / tc:.2f}"))
+    return rows

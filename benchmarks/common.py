@@ -1,0 +1,85 @@
+"""Shared benchmark utilities: timing + the paper's workload model.
+
+The paper's workload: naive matmul over square 2^n double matrices under
+row-major / Morton / Hilbert elements orderings, frequencies {1.2, 1.8,
+2.6, ondemand} GHz, 1..16 threads (Table III).  The TPU transliteration
+(DESIGN.md §2) models a blocked matmul on v5e chips: block-level traffic
+from the exact LRU simulator, compute from MXU peak, DVFS via f_scale.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.energy import TPU_V5E, energy_joules
+from repro.core.locality import matmul_hbm_traffic
+from repro.core.schedule import grid_schedule
+
+BLOCK = 128
+DTYPE_BYTES = 4  # f32 blocks (paper uses f64; MXU is f32/bf16 -- DESIGN §2)
+FREQS = {"1.2GHz": 1.2 / 2.6, "1.8GHz": 1.8 / 2.6, "2.6GHz": 1.0,
+         "ondemand": 1.15}   # ondemand ~ turbo above nominal
+
+
+def timeit(fn, *args, reps=5, warmup=2):
+    """Median wall time (seconds) of fn(*args) with block_until_ready."""
+    import jax
+
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def matmul_model(size_log2: int, schedule: str, *, chips: int = 1,
+                 f_scale: float = 1.0, vmem_blocks: int | None = None,
+                 hw=TPU_V5E):
+    """Time/energy model of one n x n x n blocked matmul under a schedule.
+
+    Grid is (n/128)^2 output tiles x (n/128) k-blocks; HBM traffic from the
+    exact LRU block-cache simulation with a VMEM-sized cache; compute =
+    2n^3 FLOPs.  ``chips`` splits the output grid row-contiguously (the
+    paper's OpenMP parallel-for analogue).
+    """
+    n = 2 ** size_log2
+    g = n // BLOCK
+    bb = BLOCK * BLOCK * DTYPE_BYTES
+    if vmem_blocks is None:
+        vmem_blocks = int(hw.vmem_per_chip * 0.8 / bb)
+    order = grid_schedule(schedule, g, g)
+    if chips > 1:
+        # split schedule into per-chip contiguous spans (locality preserved)
+        spans = np.array_split(order, chips)
+        traffic = 0
+        for s in spans:
+            r = matmul_hbm_traffic(
+                s, g, {"A": bb, "B": bb, "C": bb},
+                model="lru", capacity=vmem_blocks)
+            traffic += r["total_bytes"]
+    else:
+        r = matmul_hbm_traffic(
+            order, g, {"A": bb, "B": bb, "C": bb},
+            model="lru", capacity=vmem_blocks)
+        traffic = r["total_bytes"]
+    flops = 2.0 * n ** 3
+    # index-computation overhead (paper §II): per-tile decode cost on the
+    # scalar unit, fully amortised when use_prefetch=True (ops.py)
+    from repro.core.curves import hilbert_index_cost_ops, \
+        morton_index_cost_ops
+    idx_ops = {"rowmajor": 2, "colmajor": 2, "boustrophedon": 4,
+               "supertile": 8,
+               "morton": morton_index_cost_ops(),
+               "hilbert": hilbert_index_cost_ops(16)}[schedule]
+    idx_time = len(order) * idx_ops / (0.94e9 * f_scale * chips)  # scalar u.
+    e = energy_joules(flops, traffic, 0.0, chips, hw=hw, f_scale=f_scale)
+    e["time"] = max(e["time"], idx_time)
+    e["idx_time"] = idx_time
+    e["traffic"] = traffic
+    return e

@@ -1,0 +1,38 @@
+# One function per paper table/figure.  Prints ``name,us_per_call,derived``
+# CSV (plus model-derived rows where the quantity is not a wall time).
+from __future__ import annotations
+
+import sys
+import time
+
+
+MODULES = [
+    "bench_exec_time",        # Table IV
+    "bench_speedup",          # Fig 4
+    "bench_freq",             # Fig 5
+    "bench_energy",           # Fig 6
+    "bench_locality",         # §IV-A cachegrind probe
+    "bench_tuned_vs_oblivious",  # §IV-B ATLAS comparison
+    "bench_kernel_traffic",   # beyond-paper kernel reuse mechanisms
+    "bench_cached_kernel",    # in-kernel DMA counts (software VMEM cache)
+    "bench_roofline",         # §Roofline feed (dry-run artifacts)
+]
+
+
+def main() -> None:
+    import importlib
+
+    only = sys.argv[1:] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for mod in MODULES:
+        if only and mod not in only:
+            continue
+        t0 = time.time()
+        m = importlib.import_module(f"benchmarks.{mod}")
+        for name, us, derived in m.run():
+            print(f"{name},{us:.3f},{derived}")
+        print(f"# {mod} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,25 @@
+"""Serving example: continuous-batching decode loop on a smoke model.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch hymba_1_5b
+
+Submits a handful of prompts, decodes with a fixed slot pool + KV/SSM
+caches, and prints tokens/sec.  Works for every arch with a decode step
+(i.e. all but hubert_xlarge).
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main as serve_main  # noqa: E402
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_1_7b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--smoke",
+                "--requests", str(args.requests),
+                "--max-new", str(args.max_new),
+                "--temperature", "0.8"])

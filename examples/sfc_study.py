@@ -1,0 +1,48 @@
+"""Reproduce the paper's study end-to-end (Tables/Figures analogues).
+
+Run:  PYTHONPATH=src python examples/sfc_study.py
+
+Walks the paper's experiment grid through the TPU-adapted models and
+prints the findings next to the paper's claims (see EXPERIMENTS.md for
+the full validation table).
+"""
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.common import FREQS, matmul_model          # noqa: E402
+from repro.core import grid_schedule, matmul_hbm_traffic   # noqa: E402
+
+print("Paper claim 1: index cost RM < MO < HO")
+from repro.core.curves import (                             # noqa: E402
+    hilbert_index_cost_ops, morton_index_cost_ops)
+print(f"  ops/translation: RM=2  MO={morton_index_cost_ops()}  "
+      f"HO={hilbert_index_cost_ops(16)}")
+
+print("\nPaper claim 2: locality HO >= MO > RM (memory-bound regime)")
+bb = {"A": 1, "B": 1, "C": 1}
+for cap in (64, 128):
+    row = {}
+    for s in ("rowmajor", "morton", "hilbert"):
+        row[s] = matmul_hbm_traffic(grid_schedule(s, 32, 32), 32, bb,
+                                    model="lru", capacity=cap)["misses"]
+    print(f"  cache={cap:4d} blocks: RM={row['rowmajor']} "
+          f"MO={row['morton']} HO={row['hilbert']}")
+
+print("\nPaper claim 3: size-10 in-cache -> ordering insignificant, RM wins")
+for size in (10, 12):
+    times = {s: matmul_model(size, s, chips=8)["time"]
+             for s in ("rowmajor", "morton", "hilbert")}
+    best = min(times, key=times.get)
+    print(f"  n=2^{size}: " + "  ".join(
+        f"{s}={t*1e3:.2f}ms" for s, t in times.items()) + f"  -> {best}")
+
+print("\nPaper claim 4: memory-bound + higher clock = disproportionate "
+      "energy")
+for f, fs in FREQS.items():
+    m = matmul_model(12, "rowmajor", chips=8, f_scale=fs)
+    print(f"  RM n=2^12 {f:>8s}: t={m['time']*1e3:7.2f} ms  "
+          f"E={m['total']:.2f} J")
+print("\n(The Morton column keeps improving with frequency -- run "
+      "benchmarks/bench_energy.py for the full Fig. 6 grid.)")

@@ -1,0 +1,1 @@
+"""repro: space-filling-curve locality framework (see README.md)."""

@@ -1,0 +1,7 @@
+from .store import (  # noqa: F401
+    AsyncCheckpointer,
+    latest_step,
+    load_checkpoint,
+    restore_with_shardings,
+    save_checkpoint,
+)

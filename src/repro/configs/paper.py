@@ -1,0 +1,18 @@
+"""The paper's own workload: dense square matmuls of 2^n doubles,
+n in {10, 11, 12}, under row-major / Morton / Hilbert orderings
+(benchmarks reproduce Table IV / Figs. 4-6 from this config)."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperConfig:
+    sizes: tuple = (10, 11, 12)           # log2 matrix dim
+    schedules: tuple = ("rowmajor", "morton", "hilbert")
+    freqs_ghz: tuple = (1.2, 1.8, 2.6, 0.0)  # 0.0 == "ondemand"
+    nominal_ghz: float = 2.6
+    threads: tuple = (1, 4, 8, 16)
+    dtype: str = "float32"                # f64 unsupported on TPU MXU
+    block: int = 128                      # TPU tile granularity
+
+
+CONFIG = PaperConfig()

@@ -1,0 +1,14 @@
+# The paper's primary contribution: space-filling-curve index arithmetic,
+# grid schedules, SFC storage layouts, the block-trace locality simulator
+# ("cachegrind" analogue) and the time/energy model (RAPL analogue).
+from . import curves, energy, layout, locality, schedule  # noqa: F401
+from .curves import (  # noqa: F401
+    hilbert_decode,
+    hilbert_encode,
+    morton_decode,
+    morton_encode,
+)
+from .energy import HW, TPU_V5E, energy_joules, roofline_terms  # noqa: F401
+from .layout import from_blocked, to_blocked  # noqa: F401
+from .locality import matmul_hbm_traffic, simulate  # noqa: F401
+from .schedule import SCHEDULES, grid_schedule, matmul_block_trace  # noqa: F401

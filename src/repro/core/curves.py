@@ -1,0 +1,215 @@
+"""Space-filling curve index arithmetic (paper §II).
+
+Morton (Z-order) en/decoding uses Raman--Wise integer dilation/contraction
+[12]: a constant sequence of shift+mask operations.  For 16-bit coordinates
+(grids up to 65536x65536 tiles -- far beyond any Pallas grid) dilation is
+4 shifts + 5 masks; the paper's "5 shifts + 5 masks" figure is the 32-bit
+variant.  All jnp variants are trace-safe (pure bit ops / fori_loop) so they
+can run inside Pallas ``index_map`` functions and jitted code.
+
+Hilbert en/decoding follows the classic iterative quadrant-rotation scan
+(Lam & Shapiro [9] style): per bit-pair, a swap/complement rotation of the
+trailing bits.  Cost is linear in the number of address bits, matching the
+paper's complexity discussion.
+
+Python/NumPy twins (``*_py``) serve as oracles for hypothesis tests and as
+host-side schedule generators.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dilate16",
+    "contract32",
+    "morton_encode",
+    "morton_decode",
+    "hilbert_encode",
+    "hilbert_decode",
+    "morton_encode_py",
+    "morton_decode_py",
+    "hilbert_encode_py",
+    "hilbert_decode_py",
+]
+
+_U = jnp.uint32
+
+# ---------------------------------------------------------------------------
+# Morton: Raman--Wise dilation / contraction (constant shift+mask sequences)
+# ---------------------------------------------------------------------------
+
+def dilate16(x):
+    """Dilate a 16-bit integer: abcd -> 0a0b0c0d (jnp, uint32)."""
+    x = jnp.asarray(x).astype(_U) & _U(0x0000FFFF)
+    x = (x | (x << 8)) & _U(0x00FF00FF)
+    x = (x | (x << 4)) & _U(0x0F0F0F0F)
+    x = (x | (x << 2)) & _U(0x33333333)
+    x = (x | (x << 1)) & _U(0x55555555)
+    return x
+
+
+def contract32(x):
+    """Inverse of :func:`dilate16` (keeps even-position bits)."""
+    x = jnp.asarray(x).astype(_U) & _U(0x55555555)
+    x = (x | (x >> 1)) & _U(0x33333333)
+    x = (x | (x >> 2)) & _U(0x0F0F0F0F)
+    x = (x | (x >> 4)) & _U(0x00FF00FF)
+    x = (x | (x >> 8)) & _U(0x0000FFFF)
+    return x
+
+
+def morton_encode(y, x):
+    """Morton index of (y, x) with y as the major coordinate (paper Fig. 3)."""
+    return (dilate16(y) << 1) | dilate16(x)
+
+
+def morton_decode(d):
+    """Inverse of :func:`morton_encode`: d -> (y, x)."""
+    d = jnp.asarray(d).astype(_U)
+    return contract32(d >> 1), contract32(d)
+
+
+# ---------------------------------------------------------------------------
+# Hilbert: iterative bit-pair scan with quadrant rotation
+# ---------------------------------------------------------------------------
+
+def hilbert_encode(y, x, order: int):
+    """Hilbert index of (y, x) on a 2**order square grid (jnp, traceable).
+
+    ``order`` must be a python int (static): the scan is a fixed-trip-count
+    fori_loop over bit-pairs, cost linear in ``order`` (paper §II-B).
+    Oriented to match paper Table I: quadrant serials (0,0)=0, (0,1)=1,
+    (1,1)=2, (1,0)=3 (transpose of the textbook orientation).
+    """
+    # swap roles so the scan's "x" is our major coordinate y (paper's
+    # orientation); the algorithm itself is the classic rotate-and-scan.
+    y, x = x, y
+    y = jnp.asarray(y).astype(_U)
+    x = jnp.asarray(x).astype(_U)
+
+    def body(i, carry):
+        d, xx, yy = carry
+        s = _U(1) << _U(order - 1 - i)
+        rx = jnp.where((xx & s) > 0, _U(1), _U(0))
+        ry = jnp.where((yy & s) > 0, _U(1), _U(0))
+        d = d + s * s * ((_U(3) * rx) ^ ry)
+        # rotate quadrant: swap/complement of trailing bits
+        swap = ry == 0
+        flip = jnp.logical_and(swap, rx == 1)
+        xx_f = jnp.where(flip, s - _U(1) - xx, xx)
+        yy_f = jnp.where(flip, s - _U(1) - yy, yy)
+        xx2 = jnp.where(swap, yy_f, xx_f)
+        yy2 = jnp.where(swap, xx_f, yy_f)
+        return d, xx2, yy2
+
+    d0 = jnp.zeros_like(x)
+    d, _, _ = jax.lax.fori_loop(0, order, body, (d0, x, y))
+    return d
+
+
+def hilbert_decode(d, order: int):
+    """Inverse of :func:`hilbert_encode`: d -> (y, x) (jnp, traceable)."""
+    d = jnp.asarray(d).astype(_U)
+
+    def body(i, carry):
+        xx, yy, t = carry
+        s = _U(1) << _U(i)
+        rx = _U(1) & (t // _U(2))
+        ry = _U(1) & (t ^ rx)
+        # rotate back
+        swap = ry == 0
+        flip = jnp.logical_and(swap, rx == 1)
+        xx_f = jnp.where(flip, s - _U(1) - xx, xx)
+        yy_f = jnp.where(flip, s - _U(1) - yy, yy)
+        xx2 = jnp.where(swap, yy_f, xx_f)
+        yy2 = jnp.where(swap, xx_f, yy_f)
+        xx3 = xx2 + s * rx
+        yy3 = yy2 + s * ry
+        return xx3, yy3, t // _U(4)
+
+    x0 = jnp.zeros_like(d)
+    y0 = jnp.zeros_like(d)
+    x, y, _ = jax.lax.fori_loop(0, order, body, (x0, y0, d))
+    return x, y  # swapped roles (see hilbert_encode): scan-x is our y
+
+
+# ---------------------------------------------------------------------------
+# Python / NumPy twins (oracles + host-side schedule generation)
+# ---------------------------------------------------------------------------
+
+def _dilate16_py(x: int) -> int:
+    x &= 0x0000FFFF
+    x = (x | (x << 8)) & 0x00FF00FF
+    x = (x | (x << 4)) & 0x0F0F0F0F
+    x = (x | (x << 2)) & 0x33333333
+    x = (x | (x << 1)) & 0x55555555
+    return x
+
+
+def _contract32_py(x: int) -> int:
+    x &= 0x55555555
+    x = (x | (x >> 1)) & 0x33333333
+    x = (x | (x >> 2)) & 0x0F0F0F0F
+    x = (x | (x >> 4)) & 0x00FF00FF
+    x = (x | (x >> 8)) & 0x0000FFFF
+    return x
+
+
+def morton_encode_py(y: int, x: int) -> int:
+    return (_dilate16_py(y) << 1) | _dilate16_py(x)
+
+
+def morton_decode_py(d: int) -> tuple[int, int]:
+    return _contract32_py(d >> 1), _contract32_py(d)
+
+
+def hilbert_encode_py(y: int, x: int, order: int) -> int:
+    y, x = x, y  # paper Table I orientation (see hilbert_encode)
+    d = 0
+    s = 1 << (order - 1)
+    while s > 0:
+        rx = 1 if (x & s) > 0 else 0
+        ry = 1 if (y & s) > 0 else 0
+        d += s * s * ((3 * rx) ^ ry)
+        if ry == 0:
+            if rx == 1:
+                x = s - 1 - x
+                y = s - 1 - y
+            x, y = y, x
+        s //= 2
+    return d
+
+
+def hilbert_decode_py(d: int, order: int) -> tuple[int, int]:
+    x = y = 0
+    t = d
+    s = 1
+    while s < (1 << order):
+        rx = 1 & (t // 2)
+        ry = 1 & (t ^ rx)
+        if ry == 0:
+            if rx == 1:
+                x = s - 1 - x
+                y = s - 1 - y
+            x, y = y, x
+        x += s * rx
+        y += s * ry
+        t //= 4
+        s *= 2
+    return x, y  # paper Table I orientation (see hilbert_encode)
+
+
+def morton_index_cost_ops() -> int:
+    """Static op count of one Morton (y,x)->d translation (paper Table cost).
+
+    Two dilations (4 shift + 5 mask + 4 or each) + 1 shift + 1 or.
+    """
+    return 2 * (4 + 5 + 4) + 2
+
+
+def hilbert_index_cost_ops(order: int) -> int:
+    """Approximate op count of one Hilbert translation: linear in bits."""
+    per_bit = 14  # cmp/mask/select/arith per bit-pair in the scan loop
+    return order * per_bit

@@ -1,0 +1,103 @@
+"""Blocked SFC storage layouts (paper §II applied to linear memory).
+
+Two granularities:
+
+* **Tile-level** (the TPU-native one): a matrix is cut into (bm, bn) tiles
+  and the tiles are stored contiguously in curve order -- consecutive curve
+  steps then read contiguous HBM, so a 2x2 quadrant group is one long DMA.
+* **Element-level** (paper-faithful, used by the CPU benchmarks to measure
+  the index-computation overhead the paper reports): every element is placed
+  at its Morton/Hilbert serial index in a flat array.
+
+Both directions are pure gathers with host-precomputed permutations, so
+they jit cleanly and differentiate (gather has a gather transpose).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .curves import (
+    hilbert_encode_py,
+    morton_encode_py,
+)
+from .schedule import grid_schedule
+
+__all__ = [
+    "tile_permutation",
+    "to_blocked",
+    "from_blocked",
+    "element_permutation",
+    "to_element_order",
+    "from_element_order",
+]
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def tile_permutation(rows: int, cols: int, schedule: str) -> np.ndarray:
+    """Permutation p of length rows*cols: p[t] = row-major tile id of the
+    t-th tile in curve order."""
+    order = grid_schedule(schedule, rows, cols)
+    return (order[:, 0] * cols + order[:, 1]).astype(np.int32)
+
+
+def to_blocked(x, bm: int, bn: int, schedule: str = "morton"):
+    """(M, N) -> (T, bm, bn) tiles in curve-order storage (pads to tiles)."""
+    m, n = x.shape
+    mt, nt = _ceil_div(m, bm), _ceil_div(n, bn)
+    pm, pn = mt * bm - m, nt * bn - n
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    tiles = x.reshape(mt, bm, nt, bn).transpose(0, 2, 1, 3).reshape(mt * nt, bm, bn)
+    perm = tile_permutation(mt, nt, schedule)
+    return tiles[perm]
+
+
+def from_blocked(tiles, m: int, n: int, bm: int, bn: int, schedule: str = "morton"):
+    """Inverse of :func:`to_blocked`, cropping padding."""
+    mt, nt = _ceil_div(m, bm), _ceil_div(n, bn)
+    perm = tile_permutation(mt, nt, schedule)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.size, dtype=np.int32)
+    tiles = tiles[inv]
+    x = tiles.reshape(mt, nt, bm, bn).transpose(0, 2, 1, 3).reshape(mt * bm, nt * bn)
+    return x[:m, :n]
+
+
+def element_permutation(n: int, schedule: str) -> np.ndarray:
+    """For an n x n matrix (n a power of two): flat row-major index -> curve
+    serial index.  ``a_curve[perm] = a_flat`` linearises in curve order."""
+    assert n & (n - 1) == 0, "element-level layout requires power-of-two n"
+    order = int(np.log2(n))
+    idx = np.arange(n * n, dtype=np.int64)
+    y, x = idx // n, idx % n
+    if schedule == "morton":
+        ser = np.asarray(
+            [morton_encode_py(int(yy), int(xx)) for yy, xx in zip(y, x)]
+        )
+    elif schedule == "hilbert":
+        ser = np.asarray(
+            [hilbert_encode_py(int(yy), int(xx), order) for yy, xx in zip(y, x)]
+        )
+    elif schedule == "rowmajor":
+        ser = idx
+    else:
+        raise ValueError(f"unsupported element schedule {schedule!r}")
+    return ser.astype(np.int64)
+
+
+def to_element_order(x, schedule: str):
+    """(n, n) -> flat (n*n,) array in curve element order (paper-faithful)."""
+    n = x.shape[0]
+    ser = element_permutation(n, schedule)
+    flat = x.reshape(-1)
+    out = jnp.zeros_like(flat)
+    return out.at[ser].set(flat)
+
+
+def from_element_order(flat, n: int, schedule: str):
+    ser = element_permutation(n, schedule)
+    return flat[ser].reshape(n, n)

@@ -1,0 +1,180 @@
+"""Grid traversal schedules (the TPU-native lift of the paper's orderings).
+
+A *schedule* is the order in which the output-tile grid of a blocked matmul
+(or any 2-D tiled computation) is visited.  The paper orders matrix
+*elements* along a curve; on TPU the memory hierarchy is software managed,
+so the curve is applied to the *block grid* instead (see DESIGN.md §2).
+
+Schedules are materialised host-side as ``(T, 2) int32`` arrays -- they are
+tiny (one entry per grid tile) and can be fed to a Pallas kernel through
+scalar prefetch, or replayed through the locality simulator.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .curves import hilbert_decode_py, morton_decode_py
+
+__all__ = [
+    "SCHEDULES",
+    "grid_schedule",
+    "matmul_block_trace",
+    "schedule_rowmajor",
+    "schedule_colmajor",
+    "schedule_morton",
+    "schedule_hilbert",
+    "schedule_peano",
+    "schedule_supertile",
+    "schedule_boustrophedon",
+]
+
+
+def _ceil_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def schedule_rowmajor(rows: int, cols: int) -> np.ndarray:
+    i, j = np.meshgrid(np.arange(rows), np.arange(cols), indexing="ij")
+    return np.stack([i.ravel(), j.ravel()], axis=1).astype(np.int32)
+
+
+def schedule_colmajor(rows: int, cols: int) -> np.ndarray:
+    i, j = np.meshgrid(np.arange(rows), np.arange(cols), indexing="ij")
+    return np.stack(
+        [i.T.ravel(), j.T.ravel()], axis=1
+    ).astype(np.int32)
+
+
+def schedule_boustrophedon(rows: int, cols: int) -> np.ndarray:
+    """Serpentine row-major: even rows left->right, odd rows right->left."""
+    out = []
+    for i in range(rows):
+        js = range(cols) if i % 2 == 0 else range(cols - 1, -1, -1)
+        out.extend((i, j) for j in js)
+    return np.asarray(out, dtype=np.int32)
+
+
+def schedule_morton(rows: int, cols: int) -> np.ndarray:
+    """Morton order over the bounding power-of-two square, filtered to grid."""
+    side = _ceil_pow2(max(rows, cols))
+    pts = [morton_decode_py(d) for d in range(side * side)]
+    out = [(y, x) for (y, x) in pts if y < rows and x < cols]
+    return np.asarray(out, dtype=np.int32)
+
+
+def schedule_hilbert(rows: int, cols: int) -> np.ndarray:
+    """Hilbert order over the bounding power-of-two square, filtered."""
+    side = _ceil_pow2(max(rows, cols))
+    order = side.bit_length() - 1
+    if order == 0:
+        return np.asarray([[0, 0]], dtype=np.int32)
+    pts = [hilbert_decode_py(d, order) for d in range(side * side)]
+    out = [(y, x) for (y, x) in pts if y < rows and x < cols]
+    return np.asarray(out, dtype=np.int32)
+
+
+def _peano_points(k: int, fx: int = 0, fy: int = 0):
+    """Peano curve on a 3^k grid (switchback construction, Bader [10]).
+
+    The paper's Related Work (§V) builds cache-oblivious matmul on this
+    curve [16]; like Hilbert it has unit steps (no jumps), but its 3x3
+    recursion avoids Hilbert's rotations -- only reflections.
+    """
+    if k == 0:
+        return [(0, 0)]
+    s = 3 ** (k - 1)
+    pts = []
+    xs = range(3) if not fx else range(2, -1, -1)
+    for jj_i, jj in enumerate(xs):
+        ys = range(3) if (fy ^ (jj_i % 2)) == 0 else range(2, -1, -1)
+        for ii in ys:
+            sub = _peano_points(k - 1, fx ^ (ii % 2), fy ^ (jj % 2))
+            pts.extend((ii * s + y, jj * s + x) for (y, x) in sub)
+    return pts
+
+
+def schedule_peano(rows: int, cols: int) -> np.ndarray:
+    """Peano order over the bounding power-of-three square, filtered."""
+    side, k = 1, 0
+    while side < max(rows, cols):
+        side *= 3
+        k += 1
+    pts = _peano_points(k)
+    out = [(y, x) for (y, x) in pts if y < rows and x < cols]
+    return np.asarray(out, dtype=np.int32)
+
+
+def schedule_supertile(
+    rows: int, cols: int, g: int = 2, inner: str = "rowmajor"
+) -> np.ndarray:
+    """Two-level blocking: g x g supertiles row-major, ``inner`` order inside.
+
+    The fixed-depth cousin of the Morton order ("Morton-2" when inner is
+    rowmajor and g=2): captures the first level of quadrant reuse with zero
+    per-step decode cost.  Partial edge supertiles are traversed in the same
+    order, clipped to the grid.
+    """
+    inner_fn = SCHEDULES[inner] if inner != "supertile" else schedule_rowmajor
+    out = []
+    for si in range(0, rows, g):
+        for sj in range(0, cols, g):
+            h = min(g, rows - si)
+            w = min(g, cols - sj)
+            for (di, dj) in inner_fn(h, w):
+                out.append((si + di, sj + dj))
+    return np.asarray(out, dtype=np.int32)
+
+
+SCHEDULES = {
+    "rowmajor": schedule_rowmajor,
+    "colmajor": schedule_colmajor,
+    "boustrophedon": schedule_boustrophedon,
+    "morton": schedule_morton,
+    "hilbert": schedule_hilbert,
+    "peano": schedule_peano,
+    "supertile": schedule_supertile,
+}
+
+
+def grid_schedule(name: str, rows: int, cols: int, **kw) -> np.ndarray:
+    """Return the (T, 2) visit order of ``name`` over a rows x cols grid."""
+    try:
+        fn = SCHEDULES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown schedule {name!r}; choose from {sorted(SCHEDULES)}"
+        ) from None
+    sched = fn(rows, cols, **kw)
+    assert sched.shape == (rows * cols, 2), (name, sched.shape)
+    return sched
+
+
+def matmul_block_trace(
+    order: np.ndarray, kt: int, k_inner: bool = True
+) -> list[tuple[str, int, int]]:
+    """Expand an output-tile schedule into the full block access trace.
+
+    C[i,j] += A[i,k] @ B[k,j] for k in range(kt).  Returns a list of
+    ``(tensor, r, c)`` accesses -- the input to the locality simulator
+    (the TPU analogue of the paper's cachegrind run).
+
+    k_inner=True matches the Pallas kernel (k is the innermost grid dim);
+    k_inner=False visits the full schedule per k slice (k outermost).
+    """
+    trace: list[tuple[str, int, int]] = []
+    if k_inner:
+        for (i, j) in order:
+            for k in range(kt):
+                trace.append(("A", int(i), int(k)))
+                trace.append(("B", int(k), int(j)))
+                trace.append(("C", int(i), int(j)))
+    else:
+        for k in range(kt):
+            for (i, j) in order:
+                trace.append(("A", int(i), int(k)))
+                trace.append(("B", int(k), int(j)))
+                trace.append(("C", int(i), int(j)))
+    return trace

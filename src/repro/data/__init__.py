@@ -1,0 +1,1 @@
+from .pipeline import PackedSyntheticData, PrefetchLoader  # noqa: F401

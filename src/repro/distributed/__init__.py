@@ -1,0 +1,1 @@
+from . import ctx, sharding, sp_attention  # noqa: F401

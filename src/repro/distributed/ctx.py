@@ -1,0 +1,91 @@
+"""Mesh context: lets pure model code emit sharding constraints when a
+production mesh is active, and stay mesh-free for CPU smoke tests."""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["MeshCtx", "mesh_context", "current", "constrain", "dp_axes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    mesh: Mesh
+    dp: tuple          # data-parallel axes, e.g. ("pod", "data")
+    model_axis: str = "model"
+    seq_axes: tuple | None = None  # decode SP axes (default: (model_axis,))
+
+
+_CTX: list[MeshCtx] = []
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh | None, seq_axes: tuple | None = None,
+                 dp: tuple | None = None):
+    if mesh is None:
+        yield None
+        return
+    ctx = MeshCtx(mesh=mesh, dp=dp if dp is not None else dp_axes(mesh),
+                  seq_axes=seq_axes)
+    _CTX.append(ctx)
+    try:
+        yield ctx
+    finally:
+        _CTX.pop()
+
+
+def current() -> MeshCtx | None:
+    return _CTX[-1] if _CTX else None
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint iff a mesh context is active.
+
+    ``spec`` entries: "dp" -> the ctx's data axes, "model" -> model axis,
+    None -> unsharded.  Dims are checked for divisibility -- a dim that
+    does not divide falls back to None (never produces an invalid spec).
+    """
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh = ctx.mesh
+    # axes already Manual (inside a shard_map region) must not appear in
+    # constraints -- they are sharded by construction there.
+    manual: set = set()
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and am.axis_names:
+            manual = {n for n, t in zip(am.axis_names, am.axis_types)
+                      if t == jax.sharding.AxisType.Manual}
+    except Exception:
+        pass
+    resolved = []
+    for dim, s in zip(x.shape, spec):
+        if s == "dp":
+            axes = ctx.dp
+        elif s == "model":
+            axes = (ctx.model_axis,)
+        elif s is None:
+            resolved.append(None)
+            continue
+        else:
+            axes = (s,) if isinstance(s, str) else tuple(s)
+        axes = tuple(a for a in axes if a not in manual)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if axes and dim % size == 0:
+            resolved.append(axes if len(axes) > 1 else axes[0])
+        else:
+            resolved.append(None)
+    if manual:
+        return jax.lax.with_sharding_constraint(x, P(*resolved))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))

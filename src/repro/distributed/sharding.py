@@ -1,0 +1,164 @@
+"""Sharding rules: parameter/optimizer/batch/cache PartitionSpecs.
+
+Parallelism layout (DESIGN.md §5):
+
+* DP  -- batch over ("pod", "data");
+* TP  -- Megatron column->row pairs over "model" on every GEMM weight
+         (flat head*dh dims, which are always divisible by 16);
+* SP  -- the attention core is sequence-sharded over "model" (uniform for
+         any head count; emitted by ``repro.models.attention`` through the
+         mesh context), and decode KV caches are sequence-sharded via the
+         shard_map online-softmax combine in ``sp_attention``;
+* EP  -- MoE experts over "model" (padded to divisibility);
+* ZeRO-1 -- optimizer moments/master additionally sharded over "data" on
+         the first divisible unsharded dim.
+
+SSM blocks are replicated (their archs are <2B params; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from .ctx import dp_axes
+
+__all__ = ["param_specs", "opt_state_specs", "batch_specs",
+           "decode_state_specs", "to_shardings", "zero1_spec"]
+
+
+def _layer_specs(cfg: ArchConfig) -> dict:
+    """Specs for one layer dict; leading L (scan) dim added by caller."""
+    col = P(None, "model")   # (d_in, d_out_sharded)
+    row = P("model", None)   # (d_in_sharded, d_out)
+    rep = P()
+    s: dict = {"norm1": rep}
+    if cfg.family in ("dense", "encoder", "vlm", "moe", "hybrid"):
+        attn = {"wq": col, "wk": col, "wv": col, "wo": row}
+        if cfg.qk_norm:
+            attn["q_norm"] = rep
+            attn["k_norm"] = rep
+        s["attn"] = attn
+        s["norm2"] = rep
+    if cfg.family in ("dense", "encoder", "vlm", "hybrid"):
+        s["mlp"] = {"w1": col, "w3": col, "w2": row}
+    if cfg.family == "moe":
+        s["moe"] = {
+            "router": rep,
+            "w1": P("model", None, None),   # (E, d, ff): expert-parallel
+            "w3": P("model", None, None),
+            "w2": P("model", None, None),
+        }
+    if cfg.family in ("ssm", "hybrid"):
+        # replicated: SSM archs are small; interleaved proj segments do not
+        # shard cleanly (DESIGN.md §5)
+        s["ssm"] = {k: rep for k in
+                    ("in_proj", "out_proj", "conv_w", "A_log", "D",
+                     "dt_bias", "norm")}
+    if cfg.family == "hybrid":
+        s["attn_out_norm"] = rep
+        s["ssm_out_norm"] = rep
+    return s
+
+
+def _add_layer_dim(spec_tree):
+    return jax.tree.map(
+        lambda p: P(*((None,) + tuple(p))), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    specs: dict = {
+        "layers": _add_layer_dim(_layer_specs(cfg)),
+        "final_norm": P(),
+    }
+    if cfg.vocab:
+        specs["embed"] = P("model", None)
+        specs["lm_head"] = P(None, "model")
+    if cfg.frontend:
+        specs["frontend_proj"] = P()
+    return specs
+
+
+def zero1_spec(p: P, shape: tuple, mesh: Mesh, axis: str = "data") -> P:
+    """Add ZeRO-1 sharding over ``axis`` on the first divisible free dim."""
+    n = mesh.shape[axis]
+    parts = list(p) + [None] * (len(shape) - len(p))
+    for i, (dim, cur) in enumerate(zip(shape, parts)):
+        if cur is None and dim % n == 0 and dim >= n:
+            parts[i] = axis
+            return P(*parts)
+    return P(*parts)
+
+
+def opt_state_specs(cfg: ArchConfig, params_shapes, mesh: Mesh) -> dict:
+    """Specs for AdamW state {m, v, master}: param spec + ZeRO-1."""
+    pspec = param_specs(cfg)
+
+    def z(spec, leaf):
+        return zero1_spec(spec, leaf.shape, mesh)
+
+    zero = jax.tree.map(z, pspec, params_shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+    return {"m": zero, "v": zero, "master": zero,
+            "count": P()}
+
+
+def _dp_if_divisible(dp: tuple, batch: int, mesh: Mesh):
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    return dp if batch % n == 0 else None
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, global_batch: int) -> dict:
+    dp = _dp_if_divisible(dp_axes(mesh), global_batch, mesh)
+    specs = {}
+    if cfg.family == "encoder":
+        specs["features"] = P(dp, None, None)
+        specs["labels"] = P(dp, None)
+        return specs
+    specs["tokens"] = P(dp, None)
+    specs["labels"] = P(dp, None)
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = P(dp, None, None)
+        specs["loss_mask"] = P(dp, None)
+    return specs
+
+
+def decode_seq_axes(cfg: ArchConfig, mesh: Mesh, global_batch: int) -> tuple:
+    """SP axes for the decode KV cache: "model" when batch shards over dp;
+    ALL mesh axes when it cannot (long_500k batch=1 -> 512-way SP)."""
+    if _dp_if_divisible(dp_axes(mesh), global_batch, mesh):
+        return ("model",)
+    return tuple(mesh.axis_names)
+
+
+def decode_state_specs(cfg: ArchConfig, mesh: Mesh, global_batch: int,
+                       cache_len: int) -> dict:
+    """KV caches: batch over dp, **sequence over SP axes** (sp_attention);
+    SSM states: batch over dp, heads over model when divisible."""
+    dp = _dp_if_divisible(dp_axes(mesh), global_batch, mesh)
+    m = mesh.shape["model"]
+    seq = decode_seq_axes(cfg, mesh, global_batch)
+    seq_sz = 1
+    for a in seq:
+        seq_sz *= mesh.shape[a]
+    sspec = seq if cache_len % seq_sz == 0 else ("model",)
+    sspec = sspec if len(sspec) > 1 else sspec[0]
+    s: dict = {}
+    if cfg.has_attention:
+        s["k"] = P(None, dp, sspec, None, None)
+        s["v"] = P(None, dp, sspec, None, None)
+        s["kv_pos"] = P(sspec)
+    if cfg.has_ssm:
+        hspec = "model" if cfg.ssm_heads % m == 0 else None
+        s["ssm_h"] = P(None, dp, hspec, None, None)
+        s["ssm_conv"] = P(None, dp, None, None)
+    return s
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

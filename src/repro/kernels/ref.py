@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the SFC matmul kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["matmul_ref", "matmul_blocked_ref"]
+
+
+def matmul_ref(a, b, out_dtype=None):
+    """f32-accumulated matmul, the semantics every kernel must match."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(
+        a, b, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def matmul_blocked_ref(a, b, bm: int, bn: int, bk: int, order, out_dtype=None):
+    """Loop-nest oracle that accumulates block-by-block in the given output
+    tile ``order`` -- proves the schedule does not change the result beyond
+    f32 addition reordering (it must not: k-order is fixed per tile)."""
+    out_dtype = out_dtype or a.dtype
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    kt = k // bk
+    out = jnp.zeros((m, n), dtype=jnp.float32)
+    for (i, j) in order:
+        i, j = int(i), int(j)
+        acc = jnp.zeros((bm, bn), dtype=jnp.float32)
+        for kk in range(kt):
+            ab = a[i * bm:(i + 1) * bm, kk * bk:(kk + 1) * bk]
+            bb = b[kk * bk:(kk + 1) * bk, j * bn:(j + 1) * bn]
+            acc += jnp.dot(ab, bb, preferred_element_type=jnp.float32)
+        out = out.at[i * bm:(i + 1) * bm, j * bn:(j + 1) * bn].set(acc)
+    return out.astype(out_dtype)

@@ -1,0 +1,3 @@
+# mesh.py (production mesh), steps.py (pjit step builders), dryrun.py
+# (multi-pod dry-run), hlo.py (trip-weighted HLO analysis), roofline.py,
+# train.py / serve.py (drivers), pp.py (pipeline parallelism), selftest.py.

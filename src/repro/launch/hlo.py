@@ -1,0 +1,295 @@
+"""HLO post-SPMD analysis: collective byte counting + op census.
+
+``compiled.as_text()`` is the per-device (SPMD-partitioned) module, so the
+byte counts below are *per-chip* quantities -- exactly what the roofline's
+collective term wants.  For each collective instruction we count the
+*operand* bytes (assignment §ROOFLINE): that is what a chip injects into
+the interconnect (all-gather: its local shard; all-reduce: its full local
+buffer; reduce-scatter/all-to-all: the local input).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+import numpy as np
+
+__all__ = ["collective_bytes", "op_census", "COLLECTIVE_OPS"]
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _operand_bytes(line: str, opname: str) -> int:
+    """Sum operand shapes: the shapes appearing after '<op>(' in the line."""
+    idx = line.find(opname + "(")
+    if idx < 0:
+        # fused/variadic syntax e.g. "all-reduce-start("
+        idx = line.find(opname)
+    args = line[idx:]
+    total = 0
+    for m in _SHAPE_RE.finditer(args):
+        total += _shape_bytes(m.group(1), m.group(2))
+    if total:
+        return total
+    # fallback: result shape(s) on the lhs
+    lhs = line[:idx]
+    return sum(_shape_bytes(m.group(1), m.group(2))
+               for m in _SHAPE_RE.finditer(lhs))
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-op-kind operand bytes + instruction counts (per chip)."""
+    out = {k: {"bytes": 0, "count": 0} for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        for op in COLLECTIVE_OPS:
+            # match the instruction, not tuple-element accessors
+            if re.search(rf"= \S* ?{op}(-start)?\(", s):
+                out[op]["bytes"] += _operand_bytes(s, op)
+                out[op]["count"] += 1
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def op_census(hlo_text: str, ops=("fusion", "dot", "convolution",
+                                  "dynamic-slice", "dynamic-update-slice",
+                                  "transpose", "reshape", "copy")) -> dict:
+    census: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"= \S+ ([a-z][a-z0-9-]*)\(", line)
+        if m and m.group(1) in ops:
+            census[m.group(1)] += 1
+    return dict(census)
+
+
+# ---------------------------------------------------------------------------
+# Trip-count-aware analysis.
+#
+# XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE -- under
+# scan-over-layers that understates flops by ~n_layers.  The analyzer below
+# parses the post-SPMD module, extracts ``known_trip_count`` from each
+# while's backend_config, and accumulates dot-FLOPs / HBM traffic /
+# collective bytes weighted by the product of enclosing trip counts.
+# ---------------------------------------------------------------------------
+
+_COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_INSTR_HEAD = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE = re.compile(r"(?:^|\s)([a-z][\w\-]*)\(")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_WHILE_REFS = re.compile(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_CALL_REF = re.compile(r"to_apply=%?([\w.\-]+)")
+_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _parse_shape(s: str):
+    """'bf16[16,256,2048]{...}' -> [(dtype, dims)]; tuples -> all leaves."""
+    return [(m.group(1), m.group(2)) for m in _SHAPE_RE.finditer(s)]
+
+
+def _bytes_of(shape_str: str) -> int:
+    return sum(_shape_bytes(dt, dims) for dt, dims in _parse_shape(shape_str))
+
+
+def _split_computations(text: str) -> dict:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_HEAD.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            if line.lstrip().startswith("ENTRY"):
+                comps["__entry__"] = comps[cur]
+            continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def analyze_hlo(text: str) -> dict:
+    """Trip-count-weighted {flops, traffic_bytes, collectives, whiles}."""
+    comps = _split_computations(text)
+
+    # per-computation static stats
+    stats: dict[str, dict] = {}
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        shapes: dict[str, str] = {}
+        instrs = []
+        for ln in lines:
+            m = _INSTR_HEAD.match(ln)
+            if not m:
+                continue
+            iname, rest = m.groups()
+            om = _OPCODE.search(rest)
+            if not om:
+                continue
+            ishape = rest[:om.start()]
+            op = om.group(1)
+            shapes[iname] = ishape
+            instrs.append((iname, ishape, op, ln))
+        st = {"flops": 0.0, "write_bytes": 0.0, "fused_bytes": 0.0,
+              "coll": defaultdict(float),
+              "coll_count": defaultdict(int), "whiles": [], "calls": []}
+        is_fusion_body = name.startswith("fused_") or \
+            name.startswith("region_") or ".fused" in name
+        # ops that do not touch HBM (views/metadata) or whose cost is
+        # accounted inside their referenced computation
+        no_traffic = {"tuple", "get-tuple-element", "parameter", "constant",
+                      "iota", "while", "conditional", "call", "bitcast",
+                      "after-all", "partition-id", "replica-id"}
+        for iname, ishape, op, ln in instrs:
+            if op == "dot":
+                flops = 0.0
+                leaves = _parse_shape(ishape)
+                if leaves:
+                    dt, dims = leaves[0]
+                    n = 1
+                    for d in (dims.split(",") if dims else []):
+                        n *= int(d)
+                    ops_m = re.search(
+                        r"dot\(%?([\w.\-]+),\s*%?([\w.\-]+)", ln)
+                    cd = _CDIMS.search(ln)
+                    k = 1
+                    if ops_m and cd and ops_m.group(1) in shapes:
+                        lshape = _parse_shape(shapes[ops_m.group(1)])
+                        if lshape:
+                            ldims = [int(x) for x in
+                                     lshape[0][1].split(",") if x]
+                            for ci in (cd.group(1).split(",")
+                                       if cd.group(1) else []):
+                                ci = int(ci)
+                                if ci < len(ldims):
+                                    k *= ldims[ci]
+                    flops = 2.0 * n * k
+                    # fused-traffic model: a dot reads both operands and
+                    # writes its result once (softmax/convert chains fuse
+                    # into neighbours on TPU)
+                    db = _bytes_of(ishape)
+                    for g in (1, 2):
+                        if ops_m and ops_m.group(g) in shapes:
+                            db += _bytes_of(shapes[ops_m.group(g)])
+                    st["fused_bytes"] += db
+                st["flops"] += flops
+            if not is_fusion_body and op not in no_traffic:
+                if op == "dynamic-update-slice" or (
+                        op == "fusion" and "dynamic-update-slice" in iname):
+                    # in-place on TPU: traffic = the update slice, not the
+                    # full buffer.  Plain DUS: use the update operand shape;
+                    # DUS fusions (scan stacking): buffer dim0 is the stack
+                    # depth, so update = result/dim0.
+                    om = re.search(
+                        r"dynamic-update-slice\(%?[\w.\-]+,\s*%?([\w.\-]+)",
+                        ln)
+                    upd = shapes.get(om.group(1)) if om else None
+                    if upd is not None:
+                        st["write_bytes"] += _bytes_of(upd)
+                        st["fused_bytes"] += 2 * _bytes_of(upd)
+                    else:
+                        leaves = _parse_shape(ishape)
+                        if leaves and leaves[0][1]:
+                            dims = [int(x) for x in leaves[0][1].split(",")]
+                            b = _bytes_of(ishape) / max(dims[0], 1)
+                            st["write_bytes"] += b
+                            st["fused_bytes"] += 2 * b
+                elif op == "dynamic-slice" or (
+                        op == "fusion" and "dynamic-slice" in iname):
+                    st["write_bytes"] += _bytes_of(ishape)
+                    st["fused_bytes"] += 2 * _bytes_of(ishape)
+                else:
+                    st["write_bytes"] += _bytes_of(ishape)
+            for cop in COLLECTIVE_OPS:
+                if re.match(rf"{cop}(-start)?$", op):
+                    cb = _operand_bytes(ln, cop)
+                    st["coll"][cop] += cb
+                    st["coll_count"][cop] += 1
+                    st["fused_bytes"] += 2 * cb  # collectives also move HBM
+            if op == "while":
+                wm = _WHILE_REFS.search(ln)
+                tm = _TRIP.search(ln)
+                if wm:
+                    st["whiles"].append(
+                        (wm.group(2), wm.group(1),
+                         int(tm.group(1)) if tm else 1))
+            cm = _CALL_REF.search(ln)
+            if cm and op in ("call", "async-start"):
+                st["calls"].append(cm.group(1))
+        stats[name] = st
+
+    entry_name = None
+    for name, lines in comps.items():
+        if name != "__entry__" and comps.get("__entry__") is lines:
+            entry_name = name
+    if entry_name is None:  # fallback: computation with most instructions
+        entry_name = max(stats, key=lambda n: len(comps[n]))
+
+    total = {"flops": 0.0, "traffic_bytes": 0.0, "fused_bytes": 0.0,
+             "coll": defaultdict(float), "coll_count": defaultdict(int)}
+    whiles_out = []
+
+    def visit(name: str, mult: float, depth: int = 0):
+        st = stats.get(name)
+        if st is None or depth > 12:
+            return
+        total["flops"] += mult * st["flops"]
+        # read+write approximation: each top-level instruction writes its
+        # result once and reads it ~once downstream
+        total["traffic_bytes"] += mult * 2.0 * st["write_bytes"]
+        total["fused_bytes"] += mult * st["fused_bytes"]
+        for k, v in st["coll"].items():
+            total["coll"][k] += mult * v
+            total["coll_count"][k] += int(mult) * st["coll_count"][k]
+        for body, cond, trip in st["whiles"]:
+            whiles_out.append({"body": body, "trip": trip,
+                               "body_flops": stats.get(body, {}).get(
+                                   "flops", 0.0)})
+            visit(body, mult * trip, depth + 1)
+            visit(cond, mult * trip, depth + 1)
+        for callee in st["calls"]:
+            visit(callee, mult, depth + 1)
+
+    visit(entry_name, 1.0)
+    coll = {k: {"bytes": total["coll"].get(k, 0.0),
+                "count": total["coll_count"].get(k, 0)}
+            for k in COLLECTIVE_OPS}
+    coll["total_bytes"] = sum(total["coll"].values())
+    coll["total_count"] = sum(total["coll_count"].values())
+    return {
+        "flops": total["flops"],
+        # fused model (TPU-like: dots+slices+collectives round-trip HBM,
+        # elementwise chains fuse) vs unfused upper bound (every top-level
+        # instruction round-trips) -- the true TPU value lies between.
+        "traffic_bytes": total["fused_bytes"],
+        "traffic_bytes_upper": total["traffic_bytes"],
+        "collectives": coll,
+        "whiles": whiles_out,
+    }

@@ -1,0 +1,129 @@
+"""Roofline table generation from dry-run artifacts (assignment §ROOFLINE).
+
+Reads artifacts/dryrun/*.json (written by launch/dryrun.py), computes the
+three roofline terms per (arch x shape x mesh) with the assignment's
+hardware constants, identifies the dominant term, and emits a markdown
+table + CSV for EXPERIMENTS.md §Roofline.
+
+Conventions:
+  * flops / traffic are PER-CHIP (post-SPMD module, trip-count-weighted
+    by launch/hlo.analyze_hlo);
+  * collective term uses per-chip operand bytes over 4 ICI links;
+  * MODEL_FLOPS: train = 6*N*D (dense) / 6*N_active*D (MoE), counted per
+    step including grad-accum microbatching; prefill = 2*N*D;
+    decode = 2*N per token * batch.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core.energy import TPU_V5E, RooflineTerms, roofline_terms
+
+__all__ = ["load_records", "roofline_row", "make_table", "main"]
+
+
+def load_records(outdir="artifacts/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def model_flops(rec) -> float:
+    n = rec["active_params"]
+    toks = rec["seq_len"] * rec["global_batch"]
+    if rec["kind"] == "train":
+        return 6.0 * n * toks
+    if rec["kind"] == "prefill":
+        return 2.0 * n * toks
+    return 2.0 * n * rec["global_batch"]  # decode: one token per row
+
+
+def _suggestion(rec, terms: RooflineTerms) -> str:
+    b = terms.bottleneck
+    if b == "compute":
+        return ("compute-bound: raise per-chip arithmetic efficiency "
+                "(fuse attention, drop remat recompute, bf16 everywhere)")
+    if b == "memory":
+        if rec["kind"] == "decode":
+            return ("HBM-bound on KV/weight reads: quantize KV cache, "
+                    "fuse decode attention, batch more requests per chip")
+        return ("HBM-bound: larger microbatches per chip / flash-style "
+                "attention fusion / selective remat to cut activation "
+                "round-trips")
+    return ("collective-bound: overlap collectives with compute, shrink "
+            "TP degree for this arch, or compress cross-pod grads")
+
+
+def roofline_row(rec, hw=TPU_V5E):
+    chips = rec["chips"]
+    w = rec["weighted"]
+    flops_chip = w["flops_per_chip"]
+    traffic_chip = w["traffic_bytes_per_chip"]
+    coll_chip = w["collectives"]["total_bytes"]
+    terms = roofline_terms(
+        flops_chip * chips, traffic_chip * chips, coll_chip, chips, hw=hw)
+    mf = model_flops(rec)
+    frac = terms.fraction_of_roofline(mf, chips, hw)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"], "chips": chips,
+        "t_compute": terms.t_compute, "t_memory": terms.t_hbm,
+        "t_collective": terms.t_ici,
+        "bottleneck": terms.bottleneck,
+        "model_flops": mf,
+        "hlo_flops": flops_chip * chips,
+        "useful_ratio": mf / max(flops_chip * chips, 1e-9),
+        "roofline_fraction": frac,
+        "suggestion": _suggestion(rec, terms),
+        "grad_accum": rec.get("grad_accum"),
+    }
+
+
+def make_table(outdir="artifacts/dryrun", mesh="single"):
+    rows = [roofline_row(r) for r in load_records(outdir)
+            if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def to_markdown(rows):
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "bottleneck | MODEL/HLO | roofline frac |")
+    sep = "|" + "---|" * 8
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.4f} | "
+            f"{r['t_memory']:.4f} | {r['t_collective']:.4f} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.1%} |")
+    return "\n".join(out)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = make_table(args.out, args.mesh)
+    if args.markdown:
+        print(to_markdown(rows))
+    else:
+        for r in rows:
+            print(f"{r['arch']},{r['shape']},{r['mesh']},"
+                  f"{r['t_compute']:.5f},{r['t_memory']:.5f},"
+                  f"{r['t_collective']:.5f},{r['bottleneck']},"
+                  f"{r['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""End-to-end training driver.
+
+Composes: config registry (--arch), synthetic packed data + prefetch,
+sharded train step (pjit), AdamW(+ZeRO-1), async checkpointing with
+auto-resume, fault-tolerant step executor (retry-from-checkpoint),
+straggler monitor.  Runs for real at smoke scale on CPU and is the same
+code path the production mesh lowers (dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3_1_7b --smoke \
+      --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, load_checkpoint
+from repro.configs import get_config, get_smoke_config
+from repro.data import PackedSyntheticData, PrefetchLoader
+from repro.launch.steps import build_train_step
+from repro.models import DotEngine, init_model
+from repro.models.config import ShapeSpec
+from repro.optim import AdamWConfig
+from repro.optim.adamw import init_opt_state
+from repro.runtime import FailureInjector, StepExecutor, StragglerMonitor
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. '2,2,2' to build a (pod,data,model) mesh")
+    ap.add_argument("--pod-compress", action="store_true")
+    ap.add_argument("--inject-failure-at", type=int, default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = ShapeSpec("cli", seq_len=args.seq, global_batch=args.batch,
+                      kind="train")
+    import repro.models.config as mcfg
+    mcfg.SHAPES[shape.name] = shape
+
+    mesh = None
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split(","))
+        names = ("pod", "data", "model")[-len(dims):]
+        mesh = jax.make_mesh(dims, names)
+
+    opt_cfg = AdamWConfig(peak_lr=args.lr, warmup=min(10, args.steps // 5),
+                          total_steps=args.steps)
+
+    if mesh is not None:
+        step_fn, (p_shd, o_shd, b_shd), _ = build_train_step(
+            cfg, mesh, shape.name, opt_cfg=opt_cfg,
+            grad_accum=args.grad_accum, pod_compress=args.pod_compress)
+        moe_pad = mesh.shape["model"]
+    else:
+        from repro.launch.steps import make_train_step
+        step_fn = jax.jit(make_train_step(cfg, None, opt_cfg,
+                                          grad_accum=args.grad_accum))
+        p_shd = o_shd = b_shd = None
+        moe_pad = None
+
+    params = init_model(cfg, jax.random.PRNGKey(args.seed), moe_pad=moe_pad)
+    opt_state = init_opt_state(params)
+    if args.pod_compress and mesh is not None and "pod" in mesh.axis_names:
+        import jax.numpy as jnp
+        pods = mesh.shape["pod"]
+        opt_state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros((pods,) + p.shape, jnp.float32), params)
+    if p_shd is not None:
+        params = jax.device_put(params, p_shd)
+        opt_state = jax.device_put(opt_state, o_shd)
+
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            tree, meta = load_checkpoint(
+                args.ckpt_dir, last, {"params": params, "opt": opt_state})
+            params, opt_state = tree["params"], tree["opt"]
+            if p_shd is not None:
+                params = jax.device_put(params, p_shd)
+                opt_state = jax.device_put(opt_state, o_shd)
+            start = last
+            print(f"[train] resumed from step {start}")
+
+    data = PackedSyntheticData(cfg, shape, seed=args.seed)
+    put = (lambda b: jax.device_put(b, b_shd)) if b_shd is not None else \
+        (lambda b: b)
+    loader = PrefetchLoader(data, start_step=start, put_fn=put)
+    loader_iter = iter(loader)
+
+    injector = FailureInjector(
+        {args.inject_failure_at: "simulated-node-loss"}
+        if args.inject_failure_at is not None else {})
+    monitor = StragglerMonitor()
+    state = {"params": params, "opt": opt_state, "last_loss": None}
+
+    def one_step(state, step):
+        _, batch = next(loader_iter)
+        p, o, metrics = step_fn(state["params"], state["opt"], batch)
+        state = {"params": p, "opt": o,
+                 "last_loss": float(metrics["loss"])}
+        if step % args.log_every == 0 or step == start + args.steps - 1:
+            print(f"[train] step {step} loss {metrics['loss']:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e}", flush=True)
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, {"params": p, "opt": o})
+        return state
+
+    def restore(step):
+        if not args.ckpt_dir:
+            return state
+        ckpt.wait()
+        last = latest_step(args.ckpt_dir)
+        if last is None:
+            return state
+        tree, _ = load_checkpoint(
+            args.ckpt_dir, last,
+            {"params": state["params"], "opt": state["opt"]})
+        print(f"[train] restored step {last} after failure", flush=True)
+        out = {"params": tree["params"], "opt": tree["opt"],
+               "last_loss": None}
+        if p_shd is not None:
+            out["params"] = jax.device_put(out["params"], p_shd)
+            out["opt"] = jax.device_put(out["opt"], o_shd)
+        return out
+
+    executor = StepExecutor(one_step, restore, injector=injector,
+                            monitor=monitor)
+    t0 = time.time()
+    final_state, end_step = executor.run(state, start, args.steps)
+    dt = time.time() - t0
+    print(f"[train] done: {args.steps} steps in {dt:.1f}s "
+          f"({dt / max(args.steps, 1) * 1e3:.0f} ms/step), "
+          f"final loss {final_state['last_loss']:.4f}, "
+          f"retries {len(executor.retries)}, "
+          f"straggler events {len(monitor.events)}")
+    loader.close()
+    if ckpt:
+        ckpt.close()
+    return final_state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+from .config import ArchConfig, SHAPES, ShapeSpec  # noqa: F401
+from .frontends import decode_inputs, input_specs, make_batch  # noqa: F401
+from .layers import DotEngine  # noqa: F401
+from .transformer import (  # noqa: F401
+    decode_step,
+    forward,
+    init_decode_state,
+    init_model,
+    loss_fn,
+)

@@ -1,0 +1,169 @@
+"""GQA attention with q-chunked exact softmax (TPU/XLA friendly).
+
+Prefill/train uses a *statically unrolled* q-chunk loop: chunk i attends
+kv[: (i+1)*C] (or the SWA window slice), so causal attention does **zero
+wasted FLOPs** (no masked-out full blocks, unlike naive chunked-flash) and
+needs no online-softmax carry -- each q chunk takes an exact softmax over
+its full key extent.  HLO size grows linearly in the chunk count (<= 32
+chunks for the 32k shapes), which XLA handles comfortably.
+
+Supports: GQA (kv head grouping), RoPE, qwen3-style per-head qk-norm,
+sliding-window attention (SWA), encoder (bidirectional) mode, and a decode
+step against a KV cache (the distributed sequence-parallel decode lives in
+``repro.distributed.sp_attention``).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DotEngine, apply_rope, init_linear, init_rms, rms_norm
+
+__all__ = ["init_attention", "attention", "decode_attention"]
+
+
+def init_attention(key, cfg, dtype=jnp.float32):
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(ks[0], d, h * dh, dtype),
+        "wk": init_linear(ks[1], d, hkv * dh, dtype),
+        "wv": init_linear(ks[2], d, hkv * dh, dtype),
+        "wo": init_linear(ks[3], h * dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms(dh, dtype)
+        p["k_norm"] = init_rms(dh, dtype)
+    return p
+
+
+def _project_qkv(x, p, cfg, engine: DotEngine, cos, sin):
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = engine.dot(x, p["wq"]).reshape(b, s, h, dh)
+    k = engine.dot(x, p["wk"]).reshape(b, s, hkv, dh)
+    v = engine.dot(x, p["wv"]).reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if cfg.rope:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,Sq,H,dh), k/v: (B,Sk,Hkv,dh) -> (B,Sq,H,dh); GQA by grouping."""
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(b, sq, h, dh)
+
+
+def attention(x, p, cfg, engine: DotEngine, cos, sin, *,
+              q_chunk: int = 1024):
+    """Full-sequence attention (train / prefill).
+
+    causal iff ``cfg.causal``; SWA iff ``cfg.swa_window``; encoder mode is
+    just ``causal=False``.
+    """
+    from repro.distributed.ctx import constrain
+
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(x, p, cfg, engine, cos, sin)
+    # SP attention core: queries sequence-sharded over "model" (head-count
+    # agnostic, always divisible); k/v replicated across it (DESIGN.md §5)
+    q = constrain(q, "dp", "model", None, None)
+    k = constrain(k, "dp", None, None, None)
+    v = constrain(v, "dp", None, None, None)
+    scale = 1.0 / math.sqrt(cfg.d_head)
+    window = cfg.swa_window
+
+    if not cfg.causal:
+        out = _sdpa(q, k, v, None, scale)
+        out = constrain(out, "dp", "model", None, None)
+        return engine.dot(out.reshape(b, s, -1), p["wo"])
+
+    c = min(q_chunk, s)
+    assert s % c == 0, (s, c)
+    outs = []
+    for i in range(s // c):
+        q_i = q[:, i * c:(i + 1) * c]
+        hi = (i + 1) * c
+        lo = 0
+        if window is not None:
+            lo = max(0, hi - c - window + 1)
+            lo = (lo // c) * c  # align to chunk for static shapes
+        k_i = k[:, lo:hi]
+        v_i = v[:, lo:hi]
+        qpos = jnp.arange(i * c, hi)[:, None]
+        kpos = jnp.arange(lo, hi)[None, :]
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        outs.append(_sdpa(q_i, k_i, v_i, mask[None, None, None], scale))
+    out = jnp.concatenate(outs, axis=1)
+    out = constrain(out, "dp", "model", None, None)
+    return engine.dot(out.reshape(b, s, -1), p["wo"])
+
+
+def prefill_kv(x, p, cfg, engine: DotEngine, cos, sin):
+    """Return (k, v) for cache seeding (no attention compute)."""
+    _, k, v = _project_qkv(x, p, cfg, engine, cos, sin)
+    return k, v
+
+
+def decode_attention(x, p, cfg, engine: DotEngine, k_cache, v_cache,
+                     cache_positions, write_slot, cur_pos, cos, sin,
+                     row_mask=None):
+    """One-token decode against a (possibly ring/SWA) KV cache.
+
+    x: (B, 1, d); k_cache/v_cache: (B, S_cache, Hkv, dh);
+    cache_positions: (S_cache,) true token position held in each slot, -1 if
+    empty (a ring cache reuses slots, so slot != position);
+    write_slot: scalar slot index for the new token; cur_pos: its position.
+
+    Returns (out (B,1,d), k_cache', v_cache') with the new entry written.
+    """
+    from repro.distributed import ctx as dctx
+
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(x, p, cfg, engine, cos, sin)
+    c = dctx.current()
+    if c is not None:
+        # sequence-parallel decode: KV cache sharded along S, online-softmax
+        # combine across shards (repro.distributed.sp_attention).
+        from repro.distributed.sp_attention import sp_decode_attention
+        seq_axes = getattr(c, "seq_axes", None) or (c.model_axis,)
+        out, k_cache, v_cache, _ = sp_decode_attention(
+            q, k_cache, v_cache, cache_positions, k_new, v_new,
+            write_slot, cur_pos, mesh=c.mesh, window=cfg.swa_window,
+            seq_axes=seq_axes,
+            dp_axes=tuple(a for a in c.dp if a not in seq_axes),
+            row_mask=row_mask)
+        out = engine.dot(out.reshape(b, 1, -1), p["wo"])
+        return out, k_cache, v_cache
+
+    slots = jnp.arange(k_cache.shape[1])
+    sel = (slots == write_slot)[None, :, None, None]
+    if row_mask is not None:  # slot-isolated writes (continuous batching)
+        sel = sel & row_mask[:, None, None, None]
+    k_cache = jnp.where(sel, k_new, k_cache)
+    v_cache = jnp.where(sel, v_new, v_cache)
+    pos = jnp.where(slots == write_slot, cur_pos, cache_positions)
+    valid = (pos >= 0) & (pos <= cur_pos)
+    if cfg.swa_window is not None:
+        valid &= pos > cur_pos - cfg.swa_window
+    scale = 1.0 / math.sqrt(cfg.d_head)
+    out = _sdpa(q, k_cache, v_cache, valid[None, None, None, None, :], scale)
+    out = engine.dot(out.reshape(b, 1, -1), p["wo"])
+    return out, k_cache, v_cache

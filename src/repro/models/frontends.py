@@ -1,0 +1,77 @@
+"""Modality frontend stubs + input construction (concrete or abstract).
+
+Per the assignment, ``[audio]``/``[vlm]`` entries cover the transformer
+backbone only: the modality frontend is a stub whose ``input_specs()``
+yields *precomputed* frame/patch embeddings of the documented shape.
+``make_batch(abstract=True)`` returns ShapeDtypeStructs (dry-run: zero
+allocation); ``abstract=False`` returns seeded random arrays (smoke tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig, SHAPES, ShapeSpec
+
+__all__ = ["make_batch", "input_specs", "decode_inputs"]
+
+
+def _arr(shape, dtype, abstract, seed, kind="normal", maxval=None):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    rng = np.random.default_rng(seed)
+    if kind == "tokens":
+        return jnp.asarray(
+            rng.integers(0, maxval, size=shape, dtype=np.int32))
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeSpec | str, *,
+               abstract: bool = False, seed: int = 0):
+    """Training/prefill batch for the arch.  See ``decode_inputs`` for
+    decode-shape inputs (token + cache state)."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    b, s = shape.global_batch, shape.seq_len
+    dt = cfg.act_jdtype()
+    batch = {}
+    if cfg.family == "encoder":
+        batch["features"] = _arr((b, s, cfg.frontend_dim), dt, abstract, seed)
+        batch["labels"] = _arr((b, s), jnp.int32, abstract, seed + 1,
+                               "tokens", cfg.vocab)
+        return batch
+    batch["tokens"] = _arr((b, s), jnp.int32, abstract, seed, "tokens",
+                           cfg.vocab)
+    batch["labels"] = _arr((b, s), jnp.int32, abstract, seed + 1, "tokens",
+                           cfg.vocab)
+    if cfg.family == "vlm":
+        nv = min(cfg.frontend_tokens, s // 2)
+        batch["vision_embeds"] = _arr((b, nv, cfg.frontend_dim), dt,
+                                      abstract, seed + 2)
+        if abstract:
+            batch["loss_mask"] = jax.ShapeDtypeStruct((b, s), jnp.float32)
+        else:
+            m = np.ones((b, s), np.float32)
+            m[:, :nv] = 0.0
+            batch["loss_mask"] = jnp.asarray(m)
+    return batch
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec | str):
+    """ShapeDtypeStruct stand-ins for every model input (assignment §2)."""
+    return make_batch(cfg, shape, abstract=True)
+
+
+def decode_inputs(cfg: ArchConfig, shape: ShapeSpec | str, *,
+                  abstract: bool = False, seed: int = 0):
+    """(tokens (B,1), pos scalar) for a decode step at seq position S-1."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    b = shape.global_batch
+    tokens = _arr((b, 1), jnp.int32, abstract, seed, "tokens", cfg.vocab)
+    if abstract:
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        pos = jnp.asarray(shape.seq_len - 1, jnp.int32)
+    return tokens, pos

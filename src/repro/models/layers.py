@@ -1,0 +1,112 @@
+"""Common model layers (pure JAX, pytree params, scan-friendly).
+
+All GEMMs route through :class:`DotEngine`, the integration point for the
+paper's technique: the engine can execute matmuls through the SFC-scheduled
+Pallas kernel (TPU) or XLA dot (CPU/default).  The engine is *static*
+configuration -- it never enters pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DotEngine", "rms_norm", "layer_norm", "rope", "apply_rope",
+           "swiglu_mlp", "init_linear", "init_rms", "Param"]
+
+Param = Any  # pytree of arrays
+
+
+@dataclasses.dataclass(frozen=True)
+class DotEngine:
+    """GEMM dispatcher.
+
+    schedule: "xla" (native dot) or an SFC schedule name executed by the
+    Pallas kernel ("morton", "hilbert", "rowmajor", ...).
+    """
+    schedule: str = "xla"
+    block: tuple = (128, 128, 128)
+    use_prefetch: bool = True
+    interpret: bool = False
+
+    def dot(self, x, w):
+        """x: (..., d_in) @ w: (d_in, d_out) -> (..., d_out)."""
+        if self.schedule == "xla":
+            return jnp.einsum("...d,df->...f", x, w)
+        from repro.kernels.ops import sfc_matmul
+
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        bm, bn, bk = self.block
+        out = sfc_matmul(
+            x2, w, schedule=self.schedule, bm=bm, bn=bn, bk=bk,
+            use_prefetch=self.use_prefetch, interpret=self.interpret,
+        )
+        return out.reshape(*lead, w.shape[-1])
+
+
+def init_linear(key, d_in: int, d_out: int, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def init_rms(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype=dtype)
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * gamma + beta
+
+
+def rope(positions, d_head: int, theta: float = 10000.0):
+    """Rotary embedding tables: positions (...,) -> cos/sin (..., d_head/2)."""
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, dh); cos/sin: (B, S, dh/2) or (S, dh/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half)
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    return jnp.concatenate([xr1, xr2], axis=-1).astype(x.dtype)
+
+
+def swiglu_mlp(x, params, engine: DotEngine):
+    """SwiGLU: w2(silu(w1 x) * w3 x). params: {w1, w3, w2}."""
+    g = engine.dot(x, params["w1"])
+    u = engine.dot(x, params["w3"])
+    return engine.dot(jax.nn.silu(g) * u, params["w2"])
+
+
+def init_swiglu(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": init_linear(k1, d, d_ff, dtype),
+        "w3": init_linear(k2, d, d_ff, dtype),
+        "w2": init_linear(k3, d_ff, d, dtype),
+    }

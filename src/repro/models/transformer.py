@@ -1,0 +1,302 @@
+"""Backbone assembly: scan-over-layers transformer for every arch family.
+
+Params are a pytree with all per-layer tensors stacked on a leading
+``n_layers`` axis, consumed by ``jax.lax.scan`` -- compile time is
+depth-independent (essential for 60-layer dry-runs on 512 devices).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ArchConfig
+from .layers import DotEngine, init_linear, init_rms, init_swiglu, rms_norm, \
+    rope, swiglu_mlp
+
+__all__ = ["init_model", "forward", "loss_fn", "init_decode_state",
+           "decode_step"]
+
+
+# --------------------------------------------------------------- init ------
+def _init_layer(key, cfg: ArchConfig, dtype, moe_pad: int | None):
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {"norm1": init_rms(cfg.d_model, dtype)}
+    if cfg.family in ("dense", "encoder", "vlm"):
+        p["attn"] = attn_mod.init_attention(ks[0], cfg, dtype)
+        p["norm2"] = init_rms(cfg.d_model, dtype)
+        p["mlp"] = init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    elif cfg.family == "moe":
+        p["attn"] = attn_mod.init_attention(ks[0], cfg, dtype)
+        p["norm2"] = init_rms(cfg.d_model, dtype)
+        p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype, moe_pad)
+    elif cfg.family == "ssm":
+        p["ssm"] = ssm_mod.init_ssm(ks[0], cfg, dtype)
+    elif cfg.family == "hybrid":
+        p["attn"] = attn_mod.init_attention(ks[0], cfg, dtype)
+        p["ssm"] = ssm_mod.init_ssm(ks[1], cfg, dtype)
+        p["attn_out_norm"] = init_rms(cfg.d_model, dtype)
+        p["ssm_out_norm"] = init_rms(cfg.d_model, dtype)
+        p["norm2"] = init_rms(cfg.d_model, dtype)
+        p["mlp"] = init_swiglu(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def init_model(cfg: ArchConfig, key, moe_pad: int | None = None):
+    """moe_pad: model-axis size to pad expert count to (EP divisibility)."""
+    dtype = cfg.param_jdtype()
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    layers = jax.vmap(
+        lambda k: _init_layer(k, cfg, dtype, moe_pad))(keys[:cfg.n_layers])
+    params: dict[str, Any] = {
+        "layers": layers,
+        "final_norm": init_rms(cfg.d_model, dtype),
+    }
+    if cfg.vocab:
+        # vocab padded to a TP-divisible multiple (config.padded_vocab);
+        # the loss/decode paths mask the padded logit columns.
+        params["embed"] = (jax.random.normal(
+            keys[-1], (cfg.padded_vocab, cfg.d_model)) * 0.02).astype(dtype)
+        params["lm_head"] = init_linear(
+            keys[-2], cfg.d_model, cfg.padded_vocab, dtype)
+    if cfg.frontend:
+        params["frontend_proj"] = init_linear(
+            keys[-3], cfg.frontend_dim, cfg.d_model, dtype)
+    return params
+
+
+# ------------------------------------------------------------- forward -----
+def _layer_fwd(x, lp, cfg: ArchConfig, engine: DotEngine, cos, sin, mesh):
+    from repro.distributed import ctx as dctx
+
+    c = dctx.current()
+    if mesh is None and c is not None:
+        mesh = c.mesh
+    x = dctx.constrain(x, "dp", None, None)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family in ("dense", "encoder", "vlm"):
+        x = x + attn_mod.attention(rms_norm(x, lp["norm1"]), lp["attn"], cfg,
+                                   engine, cos, sin,
+                                   q_chunk=cfg.attn_q_chunk)
+        x = x + swiglu_mlp(rms_norm(x, lp["norm2"]), lp["mlp"], engine)
+    elif cfg.family == "moe":
+        x = x + attn_mod.attention(rms_norm(x, lp["norm1"]), lp["attn"], cfg,
+                                   engine, cos, sin,
+                                   q_chunk=cfg.attn_q_chunk)
+        y, aux = moe_mod.moe_ffn(
+            rms_norm(x, lp["norm2"]), lp["moe"], cfg, engine, mesh=mesh,
+            data_axes=(c.dp if c is not None else ("data",)))
+        x = x + y
+    elif cfg.family == "ssm":
+        x = x + ssm_mod.ssd_forward(rms_norm(x, lp["norm1"]), lp["ssm"], cfg,
+                                    engine, chunk=cfg.ssd_chunk)
+    elif cfg.family == "hybrid":
+        h = rms_norm(x, lp["norm1"])
+        a = attn_mod.attention(h, lp["attn"], cfg, engine, cos, sin,
+                               q_chunk=cfg.attn_q_chunk)
+        s = ssm_mod.ssd_forward(h, lp["ssm"], cfg, engine,
+                                chunk=cfg.ssd_chunk)
+        x = x + 0.5 * (rms_norm(a, lp["attn_out_norm"])
+                       + rms_norm(s, lp["ssm_out_norm"]))
+        x = x + swiglu_mlp(rms_norm(x, lp["norm2"]), lp["mlp"], engine)
+    else:
+        raise ValueError(cfg.family)
+    return x, aux
+
+
+def embed_inputs(params, cfg: ArchConfig, batch, engine: DotEngine):
+    """tokens (+ frontend features) -> (B, S, d) activations."""
+    dtype = cfg.act_jdtype()
+    if cfg.family == "encoder":
+        # audio stub: precomputed frame embeddings (B, S, frontend_dim)
+        x = engine.dot(batch["features"].astype(dtype),
+                       params["frontend_proj"].astype(dtype))
+        return x
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dtype)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        # vision stub: precomputed patch embeddings replace the first
+        # ``frontend_tokens`` positions after projection (LLaVA-style).
+        v = engine.dot(batch["vision_embeds"].astype(dtype),
+                       params["frontend_proj"].astype(dtype))
+        pos = jnp.arange(x.shape[1])[None, :, None]
+        nv = v.shape[1]
+        vpad = jnp.pad(v, ((0, 0), (0, x.shape[1] - nv), (0, 0)))
+        x = jnp.where(pos < nv, vpad, x)
+    return x
+
+
+def forward(params, cfg: ArchConfig, batch, engine: DotEngine | None = None,
+            mesh=None):
+    """Full-sequence forward -> (logits (B,S,V) f32, aux_loss)."""
+    from repro.distributed.ctx import constrain
+    engine = engine or DotEngine()
+    x = embed_inputs(params, cfg, batch, engine)
+    x = constrain(x, "dp", None, None)
+    b, s, _ = x.shape
+    if cfg.has_attention and cfg.rope:
+        cos, sin = rope(jnp.arange(s), cfg.d_head, cfg.rope_theta)
+    else:
+        cos = sin = None
+
+    def body(x, lp):
+        return _layer_fwd(x, lp, cfg, engine, cos, sin, mesh)
+
+    if cfg.remat:
+        if cfg.remat_policy == "dots":
+            # save GEMM outputs, recompute only elementwise chains --
+            # cuts backward recompute flops and activation traffic
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            body = jax.checkpoint(body, policy=policy)
+        else:
+            body = jax.checkpoint(body)
+    x, auxs = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"])
+    from repro.distributed.ctx import constrain
+    logits = engine.dot(x, params["lm_head"]).astype(jnp.float32) \
+        if cfg.vocab else x
+    logits = _mask_padded_vocab(logits, cfg)
+    logits = constrain(logits, "dp", None, "model")
+    return logits, auxs.mean()
+
+
+def _mask_padded_vocab(logits, cfg: ArchConfig):
+    if cfg.vocab and cfg.padded_vocab != cfg.vocab:
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad, -1e30, logits)
+    return logits
+
+
+def loss_fn(params, cfg: ArchConfig, batch, engine: DotEngine | None = None,
+            mesh=None, aux_weight: float = 0.01):
+    """Next-token (causal) or per-position (encoder) cross entropy."""
+    logits, aux = forward(params, cfg, batch, engine, mesh)
+    labels = batch["labels"]
+    if cfg.causal:
+        logits = logits[:, :-1]
+        labels = labels[:, 1:]
+    mask = batch.get("loss_mask")
+    if mask is not None and cfg.causal:
+        mask = mask[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+    else:
+        denom = nll.size
+    loss = nll.sum() / denom
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+# --------------------------------------------------------------- decode ----
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int,
+                      dtype=None):
+    """Allocate per-layer caches (stacked on layer axis for lax.scan)."""
+    dtype = dtype or cfg.act_jdtype()
+    st: dict[str, Any] = {}
+    if cfg.has_attention:
+        c = cache_len if cfg.swa_window is None \
+            else min(cache_len, cfg.swa_window)
+        st["k"] = jnp.zeros(
+            (cfg.n_layers, batch, c, cfg.n_kv_heads, cfg.d_head), dtype)
+        st["v"] = jnp.zeros_like(st["k"])
+        st["kv_pos"] = jnp.full((c,), -1, jnp.int32)
+    if cfg.has_ssm:
+        shp = ssm_mod.ssm_state_shape(cfg, batch)
+        st["ssm_h"] = jnp.zeros((cfg.n_layers,) + shp["h"], jnp.float32)
+        st["ssm_conv"] = jnp.zeros((cfg.n_layers,) + shp["conv"], dtype)
+    return st
+
+
+def decode_step(params, cfg: ArchConfig, state, tokens, pos,
+                engine: DotEngine | None = None, row_mask=None):
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 position.
+
+    Returns (logits (B, 1, V), new_state).  The KV cache is a ring buffer
+    when SWA bounds it (slot = pos % cache_len); dense otherwise.
+    ``row_mask`` (B,) bool: rows with False keep their caches/states
+    untouched (slot-isolated writes for continuous batching).
+    """
+    engine = engine or DotEngine()
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_jdtype())
+    if cfg.has_attention and cfg.rope:
+        cos, sin = rope(pos[None], cfg.d_head, cfg.rope_theta)
+        cos, sin = cos[None], sin[None]  # (B=1bc, S=1, dh/2)
+    else:
+        cos = sin = None
+    cache_len = state["k"].shape[2] if cfg.has_attention else 0
+    slot = pos % cache_len if cfg.has_attention else 0
+
+    def body(x, layer):
+        lp = layer["p"]
+        outs = {}
+        if cfg.family in ("dense", "vlm"):
+            a, knew, vnew = attn_mod.decode_attention(
+                rms_norm(x, lp["norm1"]), lp["attn"], cfg, engine,
+                layer["k"], layer["v"], state["kv_pos"], slot, pos, cos,
+                sin, row_mask)
+            x = x + a
+            x = x + swiglu_mlp(rms_norm(x, lp["norm2"]), lp["mlp"], engine)
+            outs.update(k=knew, v=vnew)
+        elif cfg.family == "moe":
+            a, knew, vnew = attn_mod.decode_attention(
+                rms_norm(x, lp["norm1"]), lp["attn"], cfg, engine,
+                layer["k"], layer["v"], state["kv_pos"], slot, pos, cos,
+                sin, row_mask)
+            x = x + a
+            # decode T is tiny: dense all-experts combine is exact
+            # (dropless) and avoids sort/scatter under SPMD
+            y, _ = moe_mod.moe_ffn(
+                rms_norm(x, lp["norm2"]), lp["moe"], cfg, engine,
+                impl="dense")
+            x = x + y
+            outs.update(k=knew, v=vnew)
+        elif cfg.family == "ssm":
+            y, ssm_new = ssm_mod.ssm_decode(
+                rms_norm(x, lp["norm1"]), lp["ssm"], cfg, engine,
+                {"h": layer["ssm_h"], "conv": layer["ssm_conv"]},
+                row_mask=row_mask)
+            x = x + y
+            outs.update(ssm_h=ssm_new["h"], ssm_conv=ssm_new["conv"])
+        elif cfg.family == "hybrid":
+            h = rms_norm(x, lp["norm1"])
+            a, knew, vnew = attn_mod.decode_attention(
+                h, lp["attn"], cfg, engine,
+                layer["k"], layer["v"], state["kv_pos"], slot, pos, cos,
+                sin, row_mask)
+            s, ssm_new = ssm_mod.ssm_decode(
+                h, lp["ssm"], cfg, engine,
+                {"h": layer["ssm_h"], "conv": layer["ssm_conv"]},
+                row_mask=row_mask)
+            x = x + 0.5 * (rms_norm(a, lp["attn_out_norm"])
+                           + rms_norm(s, lp["ssm_out_norm"]))
+            x = x + swiglu_mlp(rms_norm(x, lp["norm2"]), lp["mlp"], engine)
+            outs.update(k=knew, v=vnew, ssm_h=ssm_new["h"],
+                        ssm_conv=ssm_new["conv"])
+        return x, outs
+
+    xs = {"p": params["layers"]}
+    for key in ("k", "v", "ssm_h", "ssm_conv"):
+        if key in state:
+            xs[key] = state[key]
+    x, upd = jax.lax.scan(body, x, xs)
+    new_state = dict(state)
+    for key in ("ssm_h", "ssm_conv"):
+        if key in upd:
+            new_state[key] = upd[key]
+    if cfg.has_attention:
+        new_state["k"] = upd["k"]
+        new_state["v"] = upd["v"]
+        new_state["kv_pos"] = state["kv_pos"].at[slot].set(pos)
+    x = rms_norm(x, params["final_norm"])
+    logits = engine.dot(x, params["lm_head"]).astype(jnp.float32)
+    logits = _mask_padded_vocab(logits, cfg)
+    return logits, new_state

@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, adamw_update, init_opt_state  # noqa: F401
+from .compress import ef_compress  # noqa: F401
+from .schedule import cosine_schedule  # noqa: F401

@@ -1,0 +1,91 @@
+"""AdamW with f32 master weights + global-norm clipping (pure pytree fns).
+
+Optimizer state is a dict {m, v, master, count}; its sharding (param spec
++ ZeRO-1 over "data") comes from ``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+    total_steps: int = 10_000
+
+
+def init_opt_state(params):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig,
+                 lr_fn: Callable | None = None):
+    """Returns (new_params, new_state, metrics)."""
+    from .schedule import cosine_schedule
+
+    step = state["count"] + 1
+    lr = (lr_fn or (lambda s: cosine_schedule(
+        s, peak_lr=cfg.peak_lr, warmup=cfg.warmup,
+        total=cfg.total_steps)))(step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        w = w - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                      + cfg.weight_decay * w)
+        return m, v, w
+
+    flat_g = jax.tree.leaves(grads)
+    tdef = jax.tree.structure(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_w = jax.tree.leaves(state["master"])
+    new_m, new_v, new_w = [], [], []
+    for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+        m2, v2, w2 = upd(g, m, v, w)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_w.append(w2)
+    master = jax.tree.unflatten(tdef, new_w)
+    new_params = jax.tree.map(
+        lambda w, p: w.astype(p.dtype), master, params)
+    new_state = {
+        "m": jax.tree.unflatten(tdef, new_m),
+        "v": jax.tree.unflatten(tdef, new_v),
+        "master": master,
+        "count": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

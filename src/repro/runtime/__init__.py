@@ -1,0 +1,2 @@
+from .fault import FailureInjector, StepExecutor, StragglerMonitor  # noqa: F401
+from .elastic import plan_elastic_mesh, reshard_tree  # noqa: F401

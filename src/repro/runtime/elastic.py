@@ -1,0 +1,52 @@
+"""Elastic re-mesh planning: shrink the data axis after node loss, then
+reshard from checkpoint.
+
+The single-controller JAX model makes elastic restart a *plan + reshard*:
+(1) pick the largest surviving mesh (we shrink the "data" axis -- batch
+gradient accumulation makes up the lost throughput; "model"/"pod" axes are
+topology-constrained), (2) rebuild shardings for the new mesh, (3)
+device_put the checkpointed pytrees (checkpoint/store.restore_with_shardings).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+__all__ = ["plan_elastic_mesh", "reshard_tree"]
+
+
+def plan_elastic_mesh(axis_names: tuple, axis_sizes: tuple,
+                      failed_chips: int, chips_per_host: int = 4):
+    """Returns (new_sizes, grad_accum_scale) after losing ``failed_chips``.
+
+    Shrinks "data" to the largest power-of-two slice that fits the
+    surviving chip count; other axes keep their sizes (a lost model shard
+    forces rebuilding the whole model row on spares in practice, which is
+    the same resharding path).
+    """
+    sizes = dict(zip(axis_names, axis_sizes))
+    total = int(np.prod(axis_sizes))
+    survivors = total - failed_chips
+    other = total // sizes["data"]
+    new_data = sizes["data"]
+    while new_data > 1 and new_data * other > survivors:
+        new_data //= 2
+    if new_data * other > survivors:
+        raise RuntimeError(
+            f"cannot form a mesh from {survivors} surviving chips")
+    scale = sizes["data"] // new_data
+    new_sizes = tuple(new_data if a == "data" else sizes[a]
+                      for a in axis_names)
+    return new_sizes, scale
+
+
+def reshard_tree(tree, new_mesh, spec_tree):
+    """device_put a host/checkpoint pytree under a new mesh's shardings."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    shardings = jax.tree.map(
+        lambda p: NamedSharding(new_mesh, p), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(jax.device_put, tree, shardings)

@@ -1,0 +1,17 @@
+"""Shared test config.
+
+NOTE: do NOT set XLA_FLAGS / host device count here -- smoke tests and
+benchmarks must see the single real CPU device.  Only launch/dryrun.py
+requests 512 placeholder devices (and only in its own process).
+Exception: distributed tests spawn subprocesses / use a small local device
+count set inside those test modules before jax import, never globally.
+"""
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro",
+    deadline=None,  # jit tracing makes first examples slow
+    suppress_health_check=[HealthCheck.too_slow],
+    max_examples=50,
+)
+settings.load_profile("repro")

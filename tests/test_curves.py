@@ -1,0 +1,116 @@
+"""Unit + property tests for SFC index arithmetic (paper §II)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import curves
+
+
+# ----------------------------------------------------------------- dilation
+@given(st.integers(min_value=0, max_value=0xFFFF))
+def test_dilate_contract_roundtrip_py(x):
+    assert curves._contract32_py(curves._dilate16_py(x)) == x
+
+
+@given(st.integers(min_value=0, max_value=0xFFFF))
+def test_dilate_matches_bit_definition(x):
+    d = curves._dilate16_py(x)
+    for b in range(16):
+        assert (d >> (2 * b)) & 1 == (x >> b) & 1
+        assert (d >> (2 * b + 1)) & 1 == 0
+
+
+# ------------------------------------------------------------------- morton
+@given(st.integers(0, 0xFFFF), st.integers(0, 0xFFFF))
+def test_morton_roundtrip_py(y, x):
+    assert curves.morton_decode_py(curves.morton_encode_py(y, x)) == (y, x)
+
+
+def test_morton_paper_example():
+    # Paper Fig. 3: (y=3, x=5) -> interleave = 0b011011 = 27, y major.
+    assert curves.morton_encode_py(3, 5) == 0b011011
+
+
+def test_morton_quadrant_order_matches_table1():
+    # Table I: MO visits (0,0),(0,1),(1,0),(1,1) -> serials 0,1,2,3
+    got = [curves.morton_encode_py(y, x) for y in (0, 1) for x in (0, 1)]
+    assert got == [0, 1, 2, 3]
+
+
+@given(st.integers(0, 2**12 - 1), st.integers(0, 2**12 - 1))
+@settings(max_examples=200)
+def test_morton_jnp_matches_py(y, x):
+    assert int(curves.morton_encode(y, x)) == curves.morton_encode_py(y, x)
+    yy, xx = curves.morton_decode(curves.morton_encode_py(y, x))
+    assert (int(yy), int(xx)) == (y, x)
+
+
+def test_morton_jnp_vectorised():
+    d = jnp.arange(256)
+    y, x = curves.morton_decode(d)
+    expect = np.asarray([curves.morton_decode_py(i) for i in range(256)])
+    np.testing.assert_array_equal(np.stack([y, x], 1), expect)
+
+
+# ------------------------------------------------------------------ hilbert
+def test_hilbert_quadrant_order_matches_table1():
+    # Table I: HO serials for quadrants (y,x): (0,0)=0 (0,1)=1 (1,0)=3 (1,1)=2
+    assert curves.hilbert_encode_py(0, 0, 1) == 0
+    assert curves.hilbert_encode_py(0, 1, 1) == 1
+    assert curves.hilbert_encode_py(1, 1, 1) == 2
+    assert curves.hilbert_encode_py(1, 0, 1) == 3
+
+
+@given(st.integers(1, 8), st.data())
+def test_hilbert_roundtrip_py(order, data):
+    n = 1 << order
+    y = data.draw(st.integers(0, n - 1))
+    x = data.draw(st.integers(0, n - 1))
+    d = curves.hilbert_encode_py(y, x, order)
+    assert 0 <= d < n * n
+    assert curves.hilbert_decode_py(d, order) == (y, x)
+
+
+@pytest.mark.parametrize("order", [1, 2, 3, 4])
+def test_hilbert_adjacency(order):
+    """Defining property: consecutive Hilbert points are L1-distance 1."""
+    n = 1 << order
+    pts = [curves.hilbert_decode_py(d, order) for d in range(n * n)]
+    for (y0, x0), (y1, x1) in zip(pts, pts[1:]):
+        assert abs(y0 - y1) + abs(x0 - x1) == 1
+
+
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_hilbert_bijective(order):
+    n = 1 << order
+    seen = {curves.hilbert_encode_py(y, x, order)
+            for y in range(n) for x in range(n)}
+    assert seen == set(range(n * n))
+
+
+@given(st.integers(1, 6), st.data())
+@settings(max_examples=100)
+def test_hilbert_jnp_matches_py(order, data):
+    n = 1 << order
+    y = data.draw(st.integers(0, n - 1))
+    x = data.draw(st.integers(0, n - 1))
+    d_py = curves.hilbert_encode_py(y, x, order)
+    assert int(curves.hilbert_encode(y, x, order)) == d_py
+    yy, xx = curves.hilbert_decode(d_py, order)
+    assert (int(yy), int(xx)) == (y, x)
+
+
+def test_morton_is_not_hilbert():
+    # the two orders differ from order 1 onward (quadrants 2,3 swapped)
+    assert curves.morton_encode_py(1, 0) != curves.hilbert_encode_py(1, 0, 1)
+
+
+def test_index_cost_ordering():
+    """Paper §IV: cost(RM) < cost(MO) < cost(HO) per index translation."""
+    rm = 2  # 1 mul + 1 add
+    mo = curves.morton_index_cost_ops()
+    ho = curves.hilbert_index_cost_ops(order=16)
+    assert rm < mo < ho

@@ -1,0 +1,75 @@
+"""Unit tests for the trip-count-weighted HLO analyzer (launch/hlo.py) --
+the §Roofline measurement instrument itself gets tested on synthetic HLO.
+"""
+import textwrap
+
+from repro.launch.hlo import analyze_hlo, collective_bytes, op_census
+
+
+SYNTH = textwrap.dedent("""
+    HloModule jit_step
+
+    %wide.body (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %iv = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+      %w = f32[16,16]{1,0} constant({...})
+      %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups={}
+      ROOT %t = (s32[], f32[8,16]) tuple(%iv, %ar)
+    }
+
+    %wide.cond (arg: (s32[], f32[8,16])) -> pred[] {
+      %p2 = (s32[], f32[8,16]) parameter(0)
+      %iv2 = s32[] get-tuple-element(%p2), index=0
+      %c = s32[] constant(12)
+      ROOT %lt = pred[] compare(%iv2, %c), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+      %a = f32[8,16]{1,0} parameter(0)
+      %b = f32[16,32]{1,0} parameter(1)
+      %dot.0 = f32[8,32]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ag = f32[8,32]{1,0} all-gather(%dot.0), dimensions={1}
+      %init = (s32[], f32[8,16]) tuple(%a, %a)
+      %while.1 = (s32[], f32[8,16]) while(%init), condition=%wide.cond, body=%wide.body, backend_config={"known_trip_count":{"n":"12"}}
+      ROOT %out = f32[8,16]{1,0} get-tuple-element(%while.1), index=1
+    }
+""")
+
+
+def test_trip_count_weighting():
+    r = analyze_hlo(SYNTH)
+    # entry dot: 2*8*32*16 = 8192; body dot: 2*8*16*16 = 4096 x 12 trips
+    assert r["flops"] == 8192 + 12 * 4096
+    assert r["whiles"] == [
+        {"body": "wide.body", "trip": 12, "body_flops": 4096.0}]
+
+
+def test_collective_weighting():
+    r = analyze_hlo(SYNTH)
+    c = r["collectives"]
+    # all-gather operand: 8*32*4 = 1024B once; all-reduce: 8*16*4 = 512B x12
+    assert c["all-gather"]["bytes"] == 8 * 32 * 4
+    assert c["all-reduce"]["bytes"] == 12 * 8 * 16 * 4
+    assert c["all-reduce"]["count"] == 12
+
+
+def test_entry_level_collective_bytes():
+    c = collective_bytes(SYNTH)
+    # unweighted: one all-gather + one all-reduce instruction
+    assert c["all-gather"]["count"] == 1
+    assert c["all-reduce"]["count"] == 1
+
+
+def test_traffic_excludes_views():
+    r = analyze_hlo(SYNTH)
+    # GTE/tuple/constant/parameter contribute nothing; dots and
+    # collectives do
+    assert r["traffic_bytes"] > 0
+    assert r["traffic_bytes"] <= r["traffic_bytes_upper"] * 2
+
+
+def test_op_census():
+    c = op_census(SYNTH)
+    assert c.get("dot") == 2

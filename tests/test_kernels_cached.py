@@ -1,0 +1,75 @@
+"""Software-VMEM-cache kernel: correctness + kernel-vs-simulator traffic.
+
+The headline validation: the DMA counter measured INSIDE the kernel equals
+the direct-mapped cache simulation over the same schedule -- the paper's
+cache-hit mechanism reproduced end to end on the TPU programming model.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.schedule import grid_schedule
+from repro.kernels.ref import matmul_ref
+from repro.kernels.sfc_matmul_cached import sfc_matmul_cached
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def _expected_dma(schedule, mt, nt, kt, nslots):
+    """Direct-mapped oracle with the kernel's slot mapping."""
+    order = grid_schedule(schedule, mt, nt)
+    a_tags = [-1] * nslots
+    b_tags = [-1] * nslots
+    a_cnt = b_cnt = 0
+    for (i, j) in order:
+        for k in range(kt):
+            a_id = int(i) * kt + k
+            if a_tags[a_id % nslots] != a_id:
+                a_tags[a_id % nslots] = a_id
+                a_cnt += 1
+            b_id = int(j) * kt + k
+            if b_tags[b_id % nslots] != b_id:
+                b_tags[b_id % nslots] = b_id
+                b_cnt += 1
+    return a_cnt, b_cnt
+
+
+@pytest.mark.parametrize("schedule", ["rowmajor", "morton", "hilbert"])
+def test_cached_kernel_correct(schedule):
+    a = _rand((64, 64), 0)
+    b = _rand((64, 64), 1)
+    out, dma = sfc_matmul_cached(a, b, schedule=schedule, bm=16, bn=16,
+                                 bk=16, nslots=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(matmul_ref(a, b)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("schedule", ["rowmajor", "morton", "hilbert"])
+@pytest.mark.parametrize("nslots", [4, 16])
+def test_kernel_dma_matches_simulator(schedule, nslots):
+    """Kernel-measured copies == direct-mapped cache model, per schedule."""
+    a = _rand((64, 64), 2)
+    b = _rand((64, 64), 3)
+    _, dma = sfc_matmul_cached(a, b, schedule=schedule, bm=16, bn=16,
+                               bk=16, nslots=nslots, interpret=True)
+    exp_a, exp_b = _expected_dma(schedule, 4, 4, 4, nslots)
+    assert int(dma[0]) == exp_a, (schedule, nslots, int(dma[0]), exp_a)
+    assert int(dma[1]) == exp_b, (schedule, nslots, int(dma[1]), exp_b)
+
+
+def test_sfc_reduces_kernel_dma():
+    """The paper's claim at kernel level: with a multi-slot cache, curve
+    schedules fetch fewer blocks than row-major on the same hardware."""
+    a = _rand((128, 128), 4)
+    b = _rand((128, 128), 5)
+    counts = {}
+    for s in ("rowmajor", "morton", "hilbert"):
+        _, dma = sfc_matmul_cached(a, b, schedule=s, bm=16, bn=16, bk=16,
+                                   nslots=32, interpret=True)
+        counts[s] = int(dma[0]) + int(dma[1])
+    assert counts["morton"] < counts["rowmajor"], counts
+    assert counts["hilbert"] <= counts["morton"] * 1.05, counts

@@ -1,0 +1,74 @@
+"""End-to-end behaviour tests for the full system."""
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.launch.serve import ServeLoop
+from repro.launch.train import main as train_main
+
+
+def test_tiny_lm_trains_and_loss_drops():
+    """The quickstart path: 40 steps on a tiny qwen3, loss must fall."""
+    state = train_main([
+        "--arch", "qwen3_1_7b", "--smoke", "--steps", "40",
+        "--batch", "8", "--seq", "64", "--lr", "3e-3",
+        "--log-every", "20"])
+    assert state["last_loss"] is not None
+    assert state["last_loss"] < 4.5  # ln(128) = 4.85 at init
+
+
+def test_train_resume_from_checkpoint():
+    with tempfile.TemporaryDirectory() as d:
+        train_main(["--arch", "hymba_1_5b", "--smoke", "--steps", "12",
+                    "--batch", "4", "--seq", "32", "--ckpt-dir", d,
+                    "--ckpt-every", "6", "--log-every", "6"])
+        # second invocation resumes from step 12
+        state = train_main(["--arch", "hymba_1_5b", "--smoke", "--steps",
+                            "6", "--batch", "4", "--seq", "32",
+                            "--ckpt-dir", d, "--ckpt-every", "6",
+                            "--log-every", "6"])
+        assert state["last_loss"] is not None
+
+
+def test_serve_loop_emits_tokens():
+    from repro.configs import get_smoke_config
+    from repro.models import init_model
+
+    cfg = get_smoke_config("qwen3_1_7b")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    loop = ServeLoop(cfg, params, slots=2, cache_len=64, temperature=0.0)
+    for r in range(3):
+        loop.submit(r, [5, 6, 7, 8])
+    out = loop.run(max_new=6)
+    assert set(out) == {0, 1, 2}
+    for toks in out.values():
+        assert len(toks) > 4           # emitted beyond the prompt
+        assert all(0 <= t < cfg.padded_vocab for t in toks)
+    # greedy decode is deterministic across same-admission requests with
+    # the same prompt (req 2 is admitted later: its RoPE positions differ
+    # under lockstep decode -- see ServeLoop docstring note)
+    assert out[0] == out[1]
+
+
+def test_benchmark_driver_runs():
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "bench_locality"],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=".")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "cachegrind/morton" in r.stdout
+
+
+def test_examples_quickstart():
+    r = subprocess.run(
+        [sys.executable, "examples/quickstart.py"],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "max |err|" in r.stdout
