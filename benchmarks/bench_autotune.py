@@ -1,0 +1,79 @@
+"""Autotuner report: tuned config vs the fixed morton/128 default vs XLA.
+
+The §IV-B trade, closed: the paper shows a tuned library (ATLAS) beats
+any fixed cache-oblivious order; ``repro.tune`` is the tuner for this
+repo's GEMM stack.  Rows report, per shape:
+
+* the tuner's chosen config and its search time (cold, then cached);
+* model HBM traffic of tuned vs the ``morton/128/128/128`` default vs
+  the ``rowmajor`` default (the tuned/oblivious penalty);
+* measured wall time of the XLA baseline (the one real wall-time on CPU;
+  kernel wall times are TPU-only and come from the roofline).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.tune import TuneConfig, autotune, predict
+from repro.tune.cache import TuneCache
+
+from .common import pick, timeit
+
+
+def run():
+    # throwaway cache: a bench run must never clobber the user's on-disk
+    # winners (which may hold TPU-measured configs) with analytic ones
+    with tempfile.TemporaryDirectory(prefix="repro-bench-tune-") as tmp:
+        return _run(TuneCache(tmp + "/tune.json"))
+
+
+def _run(cache):
+    rows = []
+    shapes = pick([(1024, 1024, 1024), (2048, 2048, 2048),
+                   (4096, 512, 4096)],
+                  [(256, 256, 256), (512, 128, 256)])
+    for (m, n, k) in shapes:
+        tag = f"{m}x{n}x{k}"
+        t0 = time.perf_counter()
+        res = autotune(m, n, k, "float32", cache=cache, refresh=True,
+                       measure=False)
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        autotune(m, n, k, "float32", cache=cache)
+        t_warm = time.perf_counter() - t0
+        cfg = res.config
+        rows.append((
+            f"autotune/search/{tag}", t_cold * 1e6,
+            f"chosen={cfg.schedule}/{cfg.bm}x{cfg.bn}x{cfg.bk}"
+            f"/pf={int(cfg.use_prefetch)};cached_us={t_warm * 1e6:.0f}"))
+
+        tuned = res.best_estimate
+        default = predict(TuneConfig("morton", 128, 128, 128), m, n, k, 4)
+        rm = predict(TuneConfig("rowmajor", 128, 128, 128), m, n, k, 4)
+        rows.append((
+            f"autotune/traffic/{tag}", 0.0,
+            f"tuned_MB={tuned.traffic_bytes / 1e6:.1f};"
+            f"morton128_MB={default.traffic_bytes / 1e6:.1f};"
+            f"rowmajor128_MB={rm.traffic_bytes / 1e6:.1f};"
+            f"tuned_vs_default={default.traffic_bytes / max(tuned.traffic_bytes, 1):.3f}x"))
+
+        rows.append((
+            f"autotune/model_time/{tag}", tuned.time * 1e6,
+            f"default_us={default.time * 1e6:.1f};"
+            f"speedup={default.time / max(tuned.time, 1e-12):.3f}x"))
+
+    # one measured row: the XLA library baseline this backend actually runs
+    m = n = k = pick(1024, 256)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    t_xla = timeit(jax.jit(lambda a, b: a @ b), a, b)
+    rows.append((f"autotune/xla_baseline/{m}x{n}x{k}", t_xla * 1e6,
+                 f"gflops={2 * m * n * k / t_xla / 1e9:.1f}"))
+    return rows

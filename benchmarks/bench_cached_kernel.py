@@ -13,15 +13,17 @@ import jax.numpy as jnp
 
 from repro.kernels.sfc_matmul_cached import sfc_matmul_cached
 
+from .common import pick
+
 
 def run():
     rows = []
-    n, blk = 128, 16          # 8x8 tile grid, kt=8
+    n, blk = pick((128, 16), (64, 16))   # 8x8 (smoke: 4x4) tile grid
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
     gt = (n // blk) ** 2 * (n // blk)  # T*KT grid steps
-    for nslots in (4, 16, 64):
+    for nslots in pick((4, 16, 64), (4, 16)):
         base = None
         for sched in ("rowmajor", "boustrophedon", "morton", "hilbert"):
             _, dma = sfc_matmul_cached(

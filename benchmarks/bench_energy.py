@@ -9,12 +9,12 @@ Validated paper claims (EXPERIMENTS.md cites the row names below):
 """
 from __future__ import annotations
 
-from .common import FREQS, matmul_model
+from .common import FREQS, matmul_model, pick
 
 
 def run():
     rows = []
-    for size in (10, 11, 12):
+    for size in pick((10, 11, 12), (8,)):
         for sched in ("rowmajor", "morton"):
             for fname, fs in FREQS.items():
                 m = matmul_model(size, sched, chips=8, f_scale=fs)

@@ -16,10 +16,11 @@ import numpy as np
 from repro.core.curves import hilbert_encode, morton_encode
 from repro.core.layout import element_permutation
 
-from .common import FREQS, matmul_model, timeit
+from .common import FREQS, matmul_model, pick, timeit
 
 
-def _index_kernels(n=1 << 10):
+def _index_kernels(n=None):
+    n = n or pick(1 << 10, 1 << 6)
     idx = jnp.arange(n * n, dtype=jnp.uint32)
     y, x = idx // n, idx % n
 
@@ -34,7 +35,8 @@ def _index_kernels(n=1 << 10):
     return rows
 
 
-def _element_layout_matmul(n=256):
+def _element_layout_matmul(n=None):
+    n = n or pick(256, 64)
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
@@ -67,7 +69,7 @@ def run():
     rows = _index_kernels()
     rows += _element_layout_matmul()
     # Table IV grid (modelled, single "socket" = 1 chip and 16 chips)
-    for size in (10, 11, 12):
+    for size in pick((10, 11, 12), (8,)):
         for sched in ("rowmajor", "morton", "hilbert"):
             for fname, fs in FREQS.items():
                 for chips in (1, 16):

@@ -5,12 +5,12 @@ once memory-bound, raising the clock past the memory clock buys little.
 """
 from __future__ import annotations
 
-from .common import FREQS, matmul_model
+from .common import FREQS, matmul_model, pick
 
 
 def run():
     rows = []
-    for size in (10, 11, 12):
+    for size in pick((10, 11, 12), (8,)):
         t_base = matmul_model(size, "rowmajor", f_scale=FREQS["1.2GHz"],
                               chips=16)["time"]
         for fname, fs in FREQS.items():

@@ -12,12 +12,12 @@ from __future__ import annotations
 from repro.core.locality import matmul_hbm_traffic
 from repro.core.schedule import grid_schedule
 
-from .common import BLOCK, DTYPE_BYTES
+from .common import BLOCK, DTYPE_BYTES, pick
 
 
 def run():
     rows = []
-    g, kt = 16, 16
+    g, kt = pick((16, 16), (8, 8))
     bb = BLOCK * BLOCK * DTYPE_BYTES
     blocks = {"A": bb, "B": bb, "C": bb}
     for sched in ("rowmajor", "boustrophedon", "morton", "hilbert",

@@ -11,10 +11,12 @@ from __future__ import annotations
 from repro.core.locality import matmul_hbm_traffic
 from repro.core.schedule import grid_schedule
 
+from .common import pick
+
 
 def run():
     rows = []
-    g, kt = 32, 32  # size-12 grid at 128-blocks
+    g, kt = pick((32, 32), (8, 8))  # size-12 grid at 128-blocks
     bb = {"A": 1, "B": 1, "C": 1}
     for cap in (2 * kt, 4 * kt, 8 * kt, 16 * kt):
         base = None
@@ -29,8 +31,9 @@ def run():
     # the paper's 5-row probe: restrict to 5 output-tile rows
     for sched in ("morton", "hilbert"):
         order = grid_schedule(sched, g, g)
+        lo, hi = pick((13, 17), (2, 6))  # 5 rows in both modes
         probe = order[[i for i, (r, c) in enumerate(order)
-                       if 13 <= r <= 17]]
+                       if lo <= r <= hi]]
         m = matmul_hbm_traffic(probe, kt, bb, model="lru", capacity=8 * kt)
         rows.append((f"cachegrind_5row_probe/{sched}", m["misses"],
                      f"misses={m['misses']}"))

@@ -16,13 +16,13 @@ import jax.numpy as jnp
 from repro.core.locality import matmul_hbm_traffic
 from repro.core.schedule import grid_schedule
 
-from .common import BLOCK, DTYPE_BYTES, timeit
+from .common import BLOCK, DTYPE_BYTES, pick, timeit
 from repro.core.energy import TPU_V5E
 
 
 def run():
     rows = []
-    n = 512
+    n = pick(512, 128)
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
@@ -42,14 +42,14 @@ def run():
 
     # traffic model: tuned two-level tiling (best supertile g for VMEM)
     # vs cache-oblivious morton at the same VMEM
-    g, kt = 32, 32
+    g, kt = pick((32, 32), (8, 8))
     bb = BLOCK * BLOCK * DTYPE_BYTES
     cap = int(TPU_V5E.vmem_per_chip * 0.8 / bb)
     blocks = {"A": bb, "B": bb, "C": bb}
     mo = matmul_hbm_traffic(grid_schedule("morton", g, g), kt, blocks,
                             model="lru", capacity=cap)["total_bytes"]
     best = None
-    for gg in (2, 4, 8, 16):
+    for gg in pick((2, 4, 8, 16), (2, 4)):
         st = matmul_hbm_traffic(
             grid_schedule("supertile", g, g, g=gg), kt, blocks,
             model="lru", capacity=cap)["total_bytes"]

@@ -8,6 +8,7 @@ from the exact LRU simulator, compute from MXU peak, DVFS via f_scale.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -20,6 +21,17 @@ BLOCK = 128
 DTYPE_BYTES = 4  # f32 blocks (paper uses f64; MXU is f32/bf16 -- DESIGN §2)
 FREQS = {"1.2GHz": 1.2 / 2.6, "1.8GHz": 1.8 / 2.6, "2.6GHz": 1.0,
          "ondemand": 1.15}   # ondemand ~ turbo above nominal
+
+
+def smoke() -> bool:
+    """True when running as the CI smoke job (benchmarks/run.py --smoke):
+    every bench entry executes, at tiny sizes."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "0") not in ("", "0")
+
+
+def pick(normal, small):
+    """``normal`` for real runs, ``small`` under --smoke."""
+    return small if smoke() else normal
 
 
 def timeit(fn, *args, reps=5, warmup=2):

@@ -1,7 +1,17 @@
-# One function per paper table/figure.  Prints ``name,us_per_call,derived``
-# CSV (plus model-derived rows where the quantity is not a wall time).
+"""One function per paper table/figure.  Prints ``name,us_per_call,derived``
+CSV (plus model-derived rows where the quantity is not a wall time).
+
+    python -m benchmarks.run [--smoke] [--json OUT.json] [module ...]
+
+--smoke runs every bench entry at tiny sizes (CI smoke job; modules pick
+sizes via benchmarks.common.pick); --json additionally writes the rows
+as a machine-readable artifact so perf regressions leave a trail.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
 
@@ -13,25 +23,57 @@ MODULES = [
     "bench_energy",           # Fig 6
     "bench_locality",         # §IV-A cachegrind probe
     "bench_tuned_vs_oblivious",  # §IV-B ATLAS comparison
+    "bench_autotune",         # repro.tune: tuned vs default vs xla
     "bench_kernel_traffic",   # beyond-paper kernel reuse mechanisms
     "bench_cached_kernel",    # in-kernel DMA counts (software VMEM cache)
     "bench_roofline",         # §Roofline feed (dry-run artifacts)
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
     import importlib
 
-    only = sys.argv[1:] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, every bench entry (CI smoke job)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write results as JSON to PATH")
+    ap.add_argument("only", nargs="*", help="subset of bench modules")
+    args = ap.parse_args(argv)
+
+    unknown = sorted(set(args.only) - set(MODULES))
+    if unknown:
+        ap.error(f"unknown bench module(s) {unknown}; "
+                 f"choose from {MODULES}")
+
+    if args.smoke:
+        # before any bench module import: modules read this via common.pick
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+
+    results = {}
     print("name,us_per_call,derived")
     for mod in MODULES:
-        if only and mod not in only:
+        if args.only and mod not in args.only:
             continue
         t0 = time.time()
         m = importlib.import_module(f"benchmarks.{mod}")
-        for name, us, derived in m.run():
+        rows = [(name, float(us), str(derived))
+                for name, us, derived in m.run()]
+        for name, us, derived in rows:
             print(f"{name},{us:.3f},{derived}")
-        print(f"# {mod} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        dt = time.time() - t0
+        results[mod] = {"rows": rows, "seconds": round(dt, 2)}
+        print(f"# {mod} done in {dt:.1f}s", file=sys.stderr)
+
+    if args.json:
+        # record the *effective* mode: REPRO_BENCH_SMOKE in the ambient
+        # environment shrinks sizes even without --smoke
+        from benchmarks.common import smoke as effective_smoke
+
+        payload = {"smoke": effective_smoke(), "results": results}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == '__main__':

@@ -1,0 +1,44 @@
+"""Compatibility shims for the pinned jax version.
+
+``jax.shard_map`` (with ``axis_names=`` / ``check_vma=``) only became a
+top-level API after the pinned 0.4.x release that CI installs (see
+pyproject.toml); there the spelling is
+``jax.experimental.shard_map.shard_map(..., auto=, check_rep=)``.  This
+wrapper exposes the new-style keyword surface on either version so call
+sites are written once against the modern API.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "tpu_compiler_params"]
+
+_NEW = hasattr(jax, "shard_map")
+if not _NEW:
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+
+def tpu_compiler_params(**kw):
+    """``pltpu.CompilerParams`` (new name) / ``pltpu.TPUCompilerParams``
+    (pinned 0.4.x name), constructed with the given fields."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kw)
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=True):
+    """New-style shard_map: ``axis_names`` are the mesh axes ``f`` is
+    manual over (default: all of them); ``check_vma`` toggles the
+    replication/varying-manual-axes check."""
+    if _NEW:
+        kw = {} if axis_names is None else {"axis_names": set(axis_names)}
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, **kw)
+    auto = frozenset() if axis_names is None else \
+        frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map_old(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma, auto=auto)

@@ -17,7 +17,6 @@ host-side schedule generators.
 """
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

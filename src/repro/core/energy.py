@@ -24,7 +24,7 @@ are relative, so they survive any sane constant choice.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 
 __all__ = ["HW", "TPU_V5E", "RooflineTerms", "roofline_terms", "energy_joules"]
 

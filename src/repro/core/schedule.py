@@ -17,6 +17,8 @@ from .curves import hilbert_decode_py, morton_decode_py
 
 __all__ = [
     "SCHEDULES",
+    "is_pow2",
+    "schedule_extra_kwargs",
     "grid_schedule",
     "matmul_block_trace",
     "schedule_rowmajor",
@@ -34,6 +36,18 @@ def _ceil_pow2(n: int) -> int:
     while p < n:
         p *= 2
     return p
+
+
+def is_pow2(n: int) -> bool:
+    """True for positive powers of two (shared by kernels and the tuner)."""
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def schedule_extra_kwargs(name: str, g: int = 0) -> dict:
+    """grid_schedule kwargs carried by a tuning config: currently just the
+    supertile factor.  Shared by the kernels and the cost model so both
+    always evaluate the same traversal."""
+    return {"g": g} if (name == "supertile" and g) else {}
 
 
 def schedule_rowmajor(rows: int, cols: int) -> np.ndarray:

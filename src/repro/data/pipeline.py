@@ -17,7 +17,6 @@ import threading
 import numpy as np
 
 from repro.models.config import ArchConfig, SHAPES, ShapeSpec
-from repro.models.frontends import make_batch
 
 __all__ = ["PackedSyntheticData", "PrefetchLoader"]
 

@@ -1,7 +1,10 @@
 # Compute hot-spot kernels for the paper's technique: Pallas TPU blocked
 # matmul with SFC grid traversal (sfc_matmul.py), the software-VMEM-cache
 # variant (sfc_matmul_cached.py), jit wrappers (ops.py), oracles (ref.py).
-from .ops import sfc_matmul  # noqa: F401
-from .ref import matmul_ref  # noqa: F401
-from .sfc_matmul import sfc_matmul_pallas  # noqa: F401
+from .ops import sfc_matmul, sfc_matmul_batched  # noqa: F401
+from .ref import matmul_batched_ref, matmul_ref  # noqa: F401
+from .sfc_matmul import (  # noqa: F401
+    sfc_matmul_batched_pallas,
+    sfc_matmul_pallas,
+)
 from .sfc_matmul_cached import sfc_matmul_cached  # noqa: F401

@@ -4,6 +4,17 @@
 can be routed through it (see ``repro.models.layers.DotEngine``).  On
 non-TPU backends it falls back to XLA dot by default (the Pallas kernel is
 TPU-targeted; ``interpret=True`` runs it on CPU for tests).
+
+``schedule="auto"`` consults the autotuner (``repro.tune``, DESIGN.md §6):
+the (shape-bucket, dtype, backend) winner comes from the on-disk cache
+when present, otherwise from the analytic cost model (plus wall-time
+adjudication on real TPU hardware).  Resolution uses only static shape /
+dtype information, so it is safe at trace time.
+
+``sfc_matmul_batched`` is the einsum-style ``bij,bjk->bik`` entry: any
+number of leading batch dims, executed by a 3-D-grid Pallas kernel with
+the SFC schedule on the (i, j) tile plane (or by ``vmap`` over the 2-D
+kernel with ``via_vmap=True``).
 """
 from __future__ import annotations
 
@@ -12,10 +23,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .ref import matmul_ref
-from .sfc_matmul import sfc_matmul_pallas
+from .ref import matmul_batched_ref, matmul_ref
+from .sfc_matmul import sfc_matmul_batched_pallas, sfc_matmul_pallas
 
-__all__ = ["sfc_matmul", "default_backend_is_tpu"]
+__all__ = ["sfc_matmul", "sfc_matmul_batched", "default_backend_is_tpu"]
 
 
 def default_backend_is_tpu() -> bool:
@@ -23,41 +34,45 @@ def default_backend_is_tpu() -> bool:
 
 
 def _pad_to(x, mult0: int, mult1: int):
-    p0 = (-x.shape[0]) % mult0
-    p1 = (-x.shape[1]) % mult1
+    """Pad the trailing two dims of ``x`` up to (mult0, mult1) multiples."""
+    p0 = (-x.shape[-2]) % mult0
+    p1 = (-x.shape[-1]) % mult1
     if p0 or p1:
-        x = jnp.pad(x, ((0, p0), (0, p1)))
+        pad = [(0, 0)] * (x.ndim - 2) + [(0, p0), (0, p1)]
+        x = jnp.pad(x, pad)
     return x
+
+
+def _resolve_auto(m: int, n: int, k: int, dtype, batched: bool = False):
+    """Map schedule="auto" to a concrete (schedule, blocks, prefetch, g).
+
+    Imported lazily: the tuner depends on this module for measurement."""
+    from repro.tune import resolve_config
+
+    cfg = resolve_config(int(m), int(n), int(k), jnp.dtype(dtype).name,
+                         batched=batched)
+    return cfg.schedule, cfg.bm, cfg.bn, cfg.bk, cfg.use_prefetch, cfg.g
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("schedule", "bm", "bn", "bk", "out_dtype",
-                     "use_prefetch", "interpret", "force_pallas"),
+                     "use_prefetch", "interpret", "force_pallas", "g"),
 )
-def sfc_matmul(
+def _sfc_matmul(
     a,
     b,
     *,
-    schedule: str = "morton",
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 128,
-    out_dtype=None,
-    use_prefetch: bool = True,
-    interpret: bool | None = None,
-    force_pallas: bool = False,
+    schedule: str,
+    bm: int,
+    bn: int,
+    bk: int,
+    out_dtype,
+    use_prefetch: bool,
+    interpret: bool | None,
+    force_pallas: bool,
+    g: int,
 ):
-    """C = A @ B, output tiles visited in ``schedule`` order.
-
-    * pads (M, N, K) up to block multiples and crops the result;
-    * ``schedule="xla"`` or a non-TPU backend (unless ``force_pallas``)
-      uses the native XLA dot -- the "tuned library" baseline (ATLAS
-      analogue in the paper's comparison);
-    * ``use_prefetch=True`` amortises curve-index computation via scalar
-      prefetch (beyond-paper; handles non-square grids), ``False`` decodes
-      in ``index_map`` (paper-faithful trade of compute for locality).
-    """
     out_dtype = out_dtype or a.dtype
     if schedule == "xla":
         return matmul_ref(a, b, out_dtype)
@@ -72,6 +87,126 @@ def sfc_matmul(
     out = sfc_matmul_pallas(
         ap, bp, schedule=schedule, bm=bm, bn=bn, bk=bk,
         out_dtype=out_dtype, use_prefetch=use_prefetch,
-        interpret=bool(interpret),
+        interpret=bool(interpret), g=g,
     )
     return out[:m, :n]
+
+
+def sfc_matmul(
+    a,
+    b,
+    *,
+    schedule: str = "morton",
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    use_prefetch: bool = True,
+    interpret: bool | None = None,
+    force_pallas: bool = False,
+    g: int = 0,
+):
+    """C = A @ B, output tiles visited in ``schedule`` order.
+
+    * pads (M, N, K) up to block multiples and crops the result;
+    * ``schedule="auto"`` resolves (schedule, block sizes, prefetch)
+      through the autotuner's cache/cost model for this shape bucket;
+    * ``schedule="xla"`` or a non-TPU backend (unless ``force_pallas``)
+      uses the native XLA dot -- the "tuned library" baseline (ATLAS
+      analogue in the paper's comparison);
+    * ``use_prefetch=True`` amortises curve-index computation via scalar
+      prefetch (beyond-paper; handles non-square grids), ``False`` decodes
+      in ``index_map`` (paper-faithful trade of compute for locality).
+    """
+    if schedule == "auto":
+        schedule, bm, bn, bk, use_prefetch, g = _resolve_auto(
+            a.shape[0], b.shape[1], a.shape[1], a.dtype)
+    return _sfc_matmul(
+        a, b, schedule=schedule, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+        use_prefetch=use_prefetch, interpret=interpret,
+        force_pallas=force_pallas, g=g)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("schedule", "bm", "bn", "bk", "out_dtype",
+                     "use_prefetch", "interpret", "force_pallas",
+                     "via_vmap", "g"),
+)
+def _sfc_matmul_batched(
+    a,
+    b,
+    *,
+    schedule: str,
+    bm: int,
+    bn: int,
+    bk: int,
+    out_dtype,
+    use_prefetch: bool,
+    interpret: bool | None,
+    force_pallas: bool,
+    via_vmap: bool,
+    g: int,
+):
+    out_dtype = out_dtype or a.dtype
+    lead = a.shape[:-2]
+    m, k = a.shape[-2:]
+    n = b.shape[-1]
+    a3 = a.reshape((-1, m, k))
+    b3 = b.reshape((-1, k, n))
+
+    if schedule == "xla" or (
+            not force_pallas and not default_backend_is_tpu()
+            and not interpret):
+        return matmul_batched_ref(a, b, out_dtype)
+
+    ap = _pad_to(a3, bm, bk)
+    bp = _pad_to(b3, bk, bn)
+    if via_vmap:
+        out = jax.vmap(
+            lambda x, y: sfc_matmul_pallas(
+                x, y, schedule=schedule, bm=bm, bn=bn, bk=bk,
+                out_dtype=out_dtype, use_prefetch=use_prefetch,
+                interpret=bool(interpret), g=g))(ap, bp)
+    else:
+        out = sfc_matmul_batched_pallas(
+            ap, bp, schedule=schedule, bm=bm, bn=bn, bk=bk,
+            out_dtype=out_dtype, use_prefetch=use_prefetch,
+            interpret=bool(interpret), g=g)
+    return out[:, :m, :n].reshape(lead + (m, n))
+
+
+def sfc_matmul_batched(
+    a,
+    b,
+    *,
+    schedule: str = "morton",
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    use_prefetch: bool = True,
+    interpret: bool | None = None,
+    force_pallas: bool = False,
+    via_vmap: bool = False,
+    g: int = 0,
+):
+    """Einsum ``bij,bjk->bik`` with SFC tile traversal per batch element.
+
+    ``a``: (..., M, K) and ``b``: (..., K, N) with identical leading
+    dims; leading dims are flattened into one batch axis for the 3-D-grid
+    kernel and restored on return.  ``schedule="auto"`` consults the
+    autotuner (keyed on the per-element GEMM shape).  ``via_vmap=True``
+    runs the 2-D kernel under ``jax.vmap`` instead of the 3-D grid --
+    the two must agree (tested), and vmap is the fallback for callers
+    that are themselves inside a ``vmap``.
+    """
+    assert a.shape[:-2] == b.shape[:-2], (a.shape, b.shape)
+    assert a.shape[-1] == b.shape[-2], (a.shape, b.shape)
+    if schedule == "auto":
+        schedule, bm, bn, bk, use_prefetch, g = _resolve_auto(
+            a.shape[-2], b.shape[-1], a.shape[-1], a.dtype, batched=True)
+    return _sfc_matmul_batched(
+        a, b, schedule=schedule, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+        use_prefetch=use_prefetch, interpret=interpret,
+        force_pallas=force_pallas, via_vmap=via_vmap, g=g)

@@ -3,13 +3,22 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["matmul_ref", "matmul_blocked_ref"]
+__all__ = ["matmul_ref", "matmul_batched_ref", "matmul_blocked_ref"]
 
 
 def matmul_ref(a, b, out_dtype=None):
     """f32-accumulated matmul, the semantics every kernel must match."""
     out_dtype = out_dtype or a.dtype
     return jnp.dot(
+        a, b, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def matmul_batched_ref(a, b, out_dtype=None):
+    """f32-accumulated batched matmul (``bij,bjk->bik`` over any leading
+    dims), the semantics ``sfc_matmul_batched`` must match."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.matmul(
         a, b, preferred_element_type=jnp.float32
     ).astype(out_dtype)
 

@@ -31,14 +31,12 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
 from repro.core.curves import hilbert_decode, morton_decode
-from repro.core.schedule import grid_schedule
+from repro.core.schedule import grid_schedule, is_pow2, \
+    schedule_extra_kwargs
 
-__all__ = ["sfc_matmul_pallas", "decode_step"]
-
-
-def _is_pow2(n: int) -> bool:
-    return n > 0 and (n & (n - 1)) == 0
+__all__ = ["sfc_matmul_pallas", "sfc_matmul_batched_pallas", "decode_step"]
 
 
 def decode_step(t, schedule: str, mt: int, nt: int):
@@ -48,13 +46,13 @@ def decode_step(t, schedule: str, mt: int, nt: int):
     if schedule == "colmajor":
         return t % mt, t // mt
     if schedule == "morton":
-        assert mt == nt and _is_pow2(mt), (
+        assert mt == nt and is_pow2(mt), (
             "closed-form morton decode needs a square power-of-two grid; "
             "use use_prefetch=True otherwise")
         y, x = morton_decode(t)
         return y.astype(jnp.int32), x.astype(jnp.int32)
     if schedule == "hilbert":
-        assert mt == nt and _is_pow2(mt), (
+        assert mt == nt and is_pow2(mt), (
             "closed-form hilbert decode needs a square power-of-two grid; "
             "use use_prefetch=True otherwise")
         order = int(np.log2(mt))
@@ -88,7 +86,7 @@ def _mm_kernel_prefetch(sched_ref, a_ref, b_ref, o_ref, acc_ref, *,
 @functools.partial(
     jax.jit,
     static_argnames=("schedule", "bm", "bn", "bk", "out_dtype",
-                     "use_prefetch", "interpret"),
+                     "use_prefetch", "interpret", "g"),
 )
 def sfc_matmul_pallas(
     a,
@@ -101,11 +99,14 @@ def sfc_matmul_pallas(
     out_dtype=None,
     use_prefetch: bool = False,
     interpret: bool = False,
+    g: int = 0,
 ):
     """C = A @ B with SFC-ordered output-tile traversal.
 
     Shapes must be multiples of the block sizes (use
     :func:`repro.kernels.ops.sfc_matmul` for the padding wrapper).
+    ``g`` is the supertile factor (``schedule="supertile"`` only; 0 means
+    the schedule's default).
     """
     m, k = a.shape
     k2, n = b.shape
@@ -138,14 +139,16 @@ def sfc_matmul_pallas(
             out_specs=pl.BlockSpec((bm, bn), o_map),
             out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=tpu_compiler_params(
                 dimension_semantics=("arbitrary", "arbitrary"),
             ),
             interpret=interpret,
         )(a, b)
 
     # --- scalar-prefetch variant: host-precomputed schedule table ---------
-    sched = jnp.asarray(grid_schedule(schedule, mt, nt), dtype=jnp.int32)
+    sched = jnp.asarray(
+        grid_schedule(schedule, mt, nt, **schedule_extra_kwargs(schedule, g)),
+        dtype=jnp.int32)
 
     def a_map(t, kk, sched_ref):
         return sched_ref[t, 0], kk
@@ -170,8 +173,135 @@ def sfc_matmul_pallas(
         functools.partial(_mm_kernel_prefetch, kt=kt, out_dtype=out_dtype),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
+        interpret=interpret,
+    )(sched, a, b)
+
+
+# ---------------------------------------------------------------------------
+# Batched variant: 3-D grid (batch, sfc tile step, k)
+# ---------------------------------------------------------------------------
+
+def _bmm_kernel(a_ref, b_ref, o_ref, acc_ref, *, kt: int, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[0], b_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == kt - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(out_dtype)
+
+
+def _bmm_kernel_prefetch(sched_ref, a_ref, b_ref, o_ref, acc_ref, *,
+                         kt: int, out_dtype):
+    _bmm_kernel(a_ref, b_ref, o_ref, acc_ref, kt=kt, out_dtype=out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("schedule", "bm", "bn", "bk", "out_dtype",
+                     "use_prefetch", "interpret", "g"),
+)
+def sfc_matmul_batched_pallas(
+    a,
+    b,
+    *,
+    schedule: str = "morton",
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    use_prefetch: bool = True,
+    interpret: bool = False,
+    g: int = 0,
+):
+    """C[b] = A[b] @ B[b] for a leading batch dim, SFC tile traversal.
+
+    Grid is (batch, T, kt) with the curve applied to the (i, j) output
+    tile plane -- the batch dim is outermost, so each batch element
+    replays the full SFC sweep and inherits its locality (consecutive
+    tile steps within one batch element elide A/B block DMAs exactly as
+    in the 2-D kernel; the k-accumulator carries across the innermost
+    dim only).  Shapes must be multiples of the block sizes (see
+    :func:`repro.kernels.ops.sfc_matmul_batched` for padding + batching
+    of arbitrary leading dims).
+    """
+    bsz, m, k = a.shape
+    bsz2, k2, n = b.shape
+    assert bsz == bsz2 and k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        (m, n, k), (bm, bn, bk))
+    mt, nt, kt = m // bm, n // bn, k // bk
+    out_dtype = out_dtype or a.dtype
+    grid = (bsz, mt * nt, kt)
+    out_shape = jax.ShapeDtypeStruct((bsz, m, n), out_dtype)
+    scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+    semantics = tpu_compiler_params(
+        dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+    )
+
+    if not use_prefetch:
+        def a_map(bb_, t, kk):
+            i, _ = decode_step(t, schedule, mt, nt)
+            return bb_, i, kk
+
+        def b_map(bb_, t, kk):
+            _, j = decode_step(t, schedule, mt, nt)
+            return bb_, kk, j
+
+        def o_map(bb_, t, kk):
+            i, j = decode_step(t, schedule, mt, nt)
+            return bb_, i, j
+
+        return pl.pallas_call(
+            functools.partial(_bmm_kernel, kt=kt, out_dtype=out_dtype),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bm, bk), a_map),
+                pl.BlockSpec((1, bk, bn), b_map),
+            ],
+            out_specs=pl.BlockSpec((1, bm, bn), o_map),
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            compiler_params=semantics,
+            interpret=interpret,
+        )(a, b)
+
+    sched = jnp.asarray(
+        grid_schedule(schedule, mt, nt, **schedule_extra_kwargs(schedule, g)),
+        dtype=jnp.int32)
+
+    def a_map(bb_, t, kk, sched_ref):
+        return bb_, sched_ref[t, 0], kk
+
+    def b_map(bb_, t, kk, sched_ref):
+        return bb_, kk, sched_ref[t, 1]
+
+    def o_map(bb_, t, kk, sched_ref):
+        return bb_, sched_ref[t, 0], sched_ref[t, 1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), a_map),
+            pl.BlockSpec((1, bk, bn), b_map),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), o_map),
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        functools.partial(_bmm_kernel_prefetch, kt=kt, out_dtype=out_dtype),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=semantics,
         interpret=interpret,
     )(sched, a, b)

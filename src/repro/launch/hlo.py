@@ -12,7 +12,6 @@ from __future__ import annotations
 import re
 from collections import defaultdict
 
-import numpy as np
 
 __all__ = ["collective_bytes", "op_census", "COLLECTIVE_OPS"]
 

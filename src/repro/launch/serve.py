@@ -22,7 +22,6 @@ import jax.numpy as jnp
 from repro.configs import get_config, get_smoke_config
 from repro.models import DotEngine, decode_step, init_decode_state, \
     init_model
-from repro.models.transformer import forward
 
 
 class ServeLoop:

@@ -13,8 +13,6 @@ same builders serve real execution (train.py/serve.py) and the dry-run
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

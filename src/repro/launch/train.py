@@ -15,13 +15,12 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, load_checkpoint
 from repro.configs import get_config, get_smoke_config
 from repro.data import PackedSyntheticData, PrefetchLoader
 from repro.launch.steps import build_train_step
-from repro.models import DotEngine, init_model
+from repro.models import init_model
 from repro.models.config import ShapeSpec
 from repro.optim import AdamWConfig
 from repro.optim.adamw import init_opt_state

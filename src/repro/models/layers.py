@@ -24,8 +24,13 @@ Param = Any  # pytree of arrays
 class DotEngine:
     """GEMM dispatcher.
 
-    schedule: "xla" (native dot) or an SFC schedule name executed by the
-    Pallas kernel ("morton", "hilbert", "rowmajor", ...).
+    schedule: "xla" (native dot), an SFC schedule name executed by the
+    Pallas kernel ("morton", "hilbert", "rowmajor", ...), or "auto" --
+    the autotuner policy: every GEMM's (schedule, block sizes, prefetch)
+    is resolved per shape bucket through ``repro.tune`` (cached winners
+    on disk, analytic cost model otherwise; DESIGN.md §6).  "auto" may
+    resolve to the XLA baseline where the model predicts the library
+    wins -- the engine stays the single integration point either way.
     """
     schedule: str = "xla"
     block: tuple = (128, 128, 128)
@@ -46,6 +51,21 @@ class DotEngine:
             use_prefetch=self.use_prefetch, interpret=self.interpret,
         )
         return out.reshape(*lead, w.shape[-1])
+
+    def dot_batched(self, x, w):
+        """Per-batch-element GEMM: x (..., B, M, K) @ w (..., B, K, N).
+
+        Routed through the 3-D-grid batched SFC kernel (or XLA matmul)
+        under the same schedule policy as :meth:`dot`."""
+        if self.schedule == "xla":
+            return jnp.matmul(x, w)
+        from repro.kernels.ops import sfc_matmul_batched
+
+        bm, bn, bk = self.block
+        return sfc_matmul_batched(
+            x, w, schedule=self.schedule, bm=bm, bn=bn, bk=bk,
+            use_prefetch=self.use_prefetch, interpret=self.interpret,
+        )
 
 
 def init_linear(key, d_in: int, d_out: int, dtype=jnp.float32, scale=None):

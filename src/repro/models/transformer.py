@@ -6,7 +6,6 @@ depth-independent (essential for 60-layer dry-runs on 512 devices).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

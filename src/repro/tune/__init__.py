@@ -1,0 +1,12 @@
+# Autotuning for the SFC GEMM path (DESIGN.md §6): analytic pre-filter
+# over the LRU traffic simulator + index-cost model, measured top-k, and
+# an on-disk winner cache consulted by sfc_matmul(schedule="auto").
+from .autotune import (  # noqa: F401
+    TuneResult,
+    autotune,
+    candidate_configs,
+    measure_config,
+    resolve_config,
+)
+from .cache import TuneCache, cache_key, default_cache_path, shape_bucket  # noqa: F401
+from .cost import CostEstimate, TuneConfig, predict, vmem_block_capacity  # noqa: F401

@@ -1,0 +1,326 @@
+"""Schedule/tiling autotuner for the SFC GEMM path (DESIGN.md §6).
+
+The paper's conclusion is that the best traversal order is a
+shape-and-hierarchy-dependent trade of index computation for locality;
+its §IV-B comparison against ATLAS shows what a search-based tuner buys
+on top of any fixed cache-oblivious order.  This module is that search,
+specialised to the repo's GEMM stack:
+
+1. **enumerate** candidate configs (schedule x block sizes x prefetch x
+   supertile factor, plus the ``xla`` library baseline);
+2. **pre-filter analytically** with the LRU traffic simulator + index
+   cost model (:mod:`repro.tune.cost`) -- milliseconds per candidate,
+   no compilation;
+3. **measure** the surviving top-k with ``benchmarks.common.timeit``
+   (median wall time, warmed up) when running on real hardware;
+4. **persist** the winner in the on-disk JSON cache
+   (:mod:`repro.tune.cache`) so later processes pay zero search cost.
+
+``resolve_config`` is the hot-path entry used by
+``repro.kernels.ops.sfc_matmul(schedule="auto")``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.energy import TPU_V5E
+from repro.core.schedule import is_pow2
+
+from .cache import TuneCache, cache_key, default_cache_path
+from .cost import CostEstimate, TuneConfig, predict
+
+__all__ = ["TuneResult", "candidate_configs", "autotune", "resolve_config",
+           "measure_config"]
+
+_BLOCK_CANDIDATES = (
+    (128, 128, 128),
+    (256, 256, 128),
+    (128, 128, 256),
+    (256, 256, 256),
+    (512, 256, 128),
+)
+_SCHEDULE_CANDIDATES = ("rowmajor", "boustrophedon", "morton", "hilbert",
+                        "supertile")
+_SUPERTILE_G = (2, 4, 8)
+
+
+def _timeit(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    """benchmarks.common.timeit when the benchmarks package is importable
+    (repo checkout); otherwise an identical local fallback (installed
+    wheel: benchmarks/ is not shipped)."""
+    try:
+        from benchmarks.common import timeit as bench_timeit
+        return bench_timeit(fn, *args, reps=reps, warmup=warmup)
+    except ImportError:
+        import jax
+
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+
+@dataclass
+class TuneResult:
+    config: TuneConfig
+    key: str
+    from_cache: bool
+    estimates: list[CostEstimate] = field(default_factory=list)
+    measured: dict = field(default_factory=dict)  # repr(cfg) -> seconds
+
+    @property
+    def best_estimate(self) -> CostEstimate | None:
+        for e in self.estimates:
+            if e.config == self.config:
+                return e
+        return self.estimates[0] if self.estimates else None
+
+
+def candidate_configs(
+    m: int,
+    n: int,
+    k: int,
+    *,
+    dtype_bytes: int = 4,
+    schedules=_SCHEDULE_CANDIDATES,
+    blocks=_BLOCK_CANDIDATES,
+    include_xla: bool = True,
+    hw=TPU_V5E,
+) -> list[TuneConfig]:
+    """Enumerate the valid search space for an M x N x K GEMM.
+
+    Filters: blocks must fit in VMEM (A + B + C + f32 accumulator) and
+    not exceed the (padded) problem; ``use_prefetch=False`` variants are
+    only emitted where the closed-form in-``index_map`` decode exists
+    (square power-of-two grids for morton/hilbert -- the paper-faithful
+    compute-for-locality trade).
+    """
+    out: list[TuneConfig] = []
+    if include_xla:
+        out.append(TuneConfig(schedule="xla"))
+    for bm, bn, bk in blocks:
+        if bm > max(m, 128) or bn > max(n, 128) or bk > max(k, 128):
+            continue  # block would be pure padding
+        vmem_need = (bm * bk + bk * bn + bm * bn) * dtype_bytes \
+            + bm * bn * 4  # f32 accumulator scratch
+        if vmem_need > hw.vmem_per_chip * 0.9:
+            continue
+        mt, nt = -(-m // bm), -(-n // bn)
+        for sched in schedules:
+            if sched == "supertile":
+                for g in _SUPERTILE_G:
+                    if g < max(mt, nt):
+                        out.append(TuneConfig(sched, bm, bn, bk, True, g))
+                continue
+            out.append(TuneConfig(sched, bm, bn, bk, True))
+            if sched in ("morton", "hilbert") and mt == nt and is_pow2(mt):
+                out.append(TuneConfig(sched, bm, bn, bk, False))
+    return out
+
+
+def measure_config(
+    cfg: TuneConfig,
+    m: int,
+    n: int,
+    k: int,
+    dtype="float32",
+    *,
+    interpret: bool = False,
+    reps: int = 5,
+    warmup: int = 2,
+    seed: int = 0,
+    batched: bool = False,
+) -> float:
+    """Median wall seconds of one GEMM under ``cfg`` on this backend.
+
+    ``batched=True`` times the 3-D-grid batched kernel (small batch of 2)
+    and reports the per-element time, so bmm/ winners are adjudicated on
+    the kernel that will actually execute them."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import sfc_matmul, sfc_matmul_batched
+
+    rng = np.random.default_rng(seed)
+    kw = dict(schedule=cfg.schedule, bm=cfg.bm, bn=cfg.bn, bk=cfg.bk,
+              use_prefetch=cfg.use_prefetch, interpret=interpret or None,
+              g=cfg.g)
+    if batched:
+        bsz = 2
+        a = jnp.asarray(rng.standard_normal((bsz, m, k)), dtype=dtype)
+        b = jnp.asarray(rng.standard_normal((bsz, k, n)), dtype=dtype)
+        t = _timeit(lambda a, b: sfc_matmul_batched(a, b, **kw), a, b,
+                    reps=reps, warmup=warmup)
+        return t / bsz
+    a = jnp.asarray(rng.standard_normal((m, k)), dtype=dtype)
+    b = jnp.asarray(rng.standard_normal((k, n)), dtype=dtype)
+    return _timeit(lambda a, b: sfc_matmul(a, b, **kw), a, b,
+                   reps=reps, warmup=warmup)
+
+
+def _should_measure(backend: str) -> bool:
+    env = os.environ.get("REPRO_TUNE_MEASURE")
+    if env is not None:
+        return env not in ("", "0")
+    return backend == "tpu"  # interpret-mode wall times are meaningless
+
+
+def autotune(
+    m: int,
+    n: int,
+    k: int,
+    dtype="float32",
+    *,
+    backend: str | None = None,
+    hw=TPU_V5E,
+    topk: int = 3,
+    measure: bool | None = None,
+    interpret: bool = False,
+    cache: TuneCache | None = None,
+    refresh: bool = False,
+    capacity: int | None = None,
+    candidates: list[TuneConfig] | None = None,
+    batched: bool = False,
+) -> TuneResult:
+    """Pick the best GEMM config for (M, N, K, dtype) on ``backend``.
+
+    Cache hit returns immediately.  Otherwise: analytic ranking of the
+    full candidate set, then (``measure``) wall-time adjudication of the
+    ``topk`` survivors, then the winner is persisted.  ``capacity``
+    pins the simulated cache size in blocks (tests); ``refresh`` forces
+    a re-search.
+    """
+    import jax
+
+    dtype_name = np.dtype(dtype).name if dtype != "bfloat16" else "bfloat16"
+    try:
+        dtype_bytes = np.dtype(dtype).itemsize
+    except TypeError:  # bfloat16 et al.
+        dtype_bytes = jax.numpy.dtype(dtype).itemsize
+    backend = backend or jax.default_backend()
+    if cache is None:  # NB: empty TuneCache is falsy (__len__), never `or`
+        cache = TuneCache()
+    key = cache_key(m, n, k, dtype_name, backend, batched=batched)
+
+    if not refresh:
+        hit = cache.get(key)
+        if hit is not None:
+            return TuneResult(TuneConfig.from_dict(hit["config"]), key,
+                              from_cache=True)
+
+    cands = candidates if candidates is not None else candidate_configs(
+        m, n, k, dtype_bytes=dtype_bytes, hw=hw)
+    ests = [predict(c, m, n, k, dtype_bytes, hw=hw, capacity=capacity)
+            for c in cands]
+    ests.sort(key=lambda e: (e.time, e.traffic_bytes))
+
+    if measure is None:
+        measure = _should_measure(backend)
+    measured: dict = {}
+    if measure and ests:
+        # off-TPU, a non-interpret "measurement" would time the identical
+        # XLA fallback for every Pallas candidate (pure noise); interpret
+        # mode at least executes the candidate's own kernel
+        interpret = interpret or backend != "tpu"
+        best, best_t = None, None
+        for e in ests[:max(1, topk)]:
+            t = measure_config(e.config, m, n, k, dtype,
+                               interpret=interpret, batched=batched)
+            measured[repr(e.config)] = t
+            if best_t is None or t < best_t:
+                best, best_t = e.config, t
+        chosen = best
+    else:
+        chosen = ests[0].config if ests else TuneConfig()
+
+    entry = {
+        "config": chosen.to_dict(),
+        "shape": [int(m), int(n), int(k)],
+        "dtype": dtype_name,
+        "backend": backend,
+        "measured": measured,
+        "predicted_time": ests[0].time if ests else None,
+    }
+    cache.put(key, entry)
+    return TuneResult(chosen, key, from_cache=False, estimates=ests,
+                      measured=measured)
+
+
+# in-process memo for resolve_config: repeated auto-dispatches must not
+# re-open/re-parse the JSON file per GEMM call.  Keyed by (cache path,
+# bucket key) so test fixtures with distinct temp paths stay isolated.
+_RESOLVE_MEMO: dict = {}
+
+
+def _validate_for_shape(cfg: TuneConfig, m: int, n: int,
+                        k: int) -> TuneConfig:
+    """Re-check a (possibly cached) config against the *exact* serving
+    shape: winners are bucketed per pow2 range, so a use_prefetch=False
+    winner tuned on a square-pow2 tile grid can be handed a same-bucket
+    shape whose padded grid has no closed-form decode.  Flipping to the
+    scalar-prefetch table is always valid (any grid) and at least as
+    fast (index cost amortised to zero)."""
+    if cfg.use_prefetch or cfg.schedule == "xla":
+        return cfg
+    if cfg.schedule in ("rowmajor", "colmajor"):
+        return cfg  # closed-form decode valid on any grid
+    mt, nt = -(-m // cfg.bm), -(-n // cfg.bn)
+    if cfg.schedule in ("morton", "hilbert") and mt == nt and is_pow2(mt):
+        return cfg
+    return dataclasses.replace(cfg, use_prefetch=True)
+
+
+def resolve_config(
+    m: int,
+    n: int,
+    k: int,
+    dtype="float32",
+    *,
+    backend: str | None = None,
+    cache: TuneCache | None = None,
+    batched: bool = False,
+) -> TuneConfig:
+    """Hot-path ``schedule="auto"`` resolution: cached winner or a fresh
+    (analytic + measured-on-TPU) search.  Memoised in-process, so after
+    first use per shape bucket it is a dict lookup; safe to call at
+    trace time (shapes are static).  ``batched`` keys the 3-D-grid
+    kernel's winners separately from the 2-D kernel's (different block
+    specs, different optimum)."""
+    import jax
+
+    dtype_name = np.dtype(dtype).name if dtype != "bfloat16" else "bfloat16"
+    bk_ = backend or jax.default_backend()
+    path = cache.path if cache is not None else default_cache_path()
+    # keyed on the cache file's mtime: any on-disk mutation (invalidate(),
+    # another process re-tuning) makes the memo entry unreachable, so a
+    # stale winner is never served past an explicit cache change
+    def _mtime() -> int:
+        try:
+            return os.stat(path).st_mtime_ns
+        except OSError:
+            return 0
+
+    bucket = cache_key(m, n, k, dtype_name, bk_, batched=batched)
+    cfg = _RESOLVE_MEMO.get((path, _mtime(), bucket))
+    if cfg is None:
+        cfg = autotune(m, n, k, dtype, backend=backend, cache=cache,
+                       batched=batched).config
+        # store under the post-search mtime (a fresh search writes the
+        # file) and evict only this path's superseded entries; once all
+        # buckets are persisted the mtime stops moving and every shape
+        # resolves from the memo without touching the file
+        now = _mtime()
+        for mk in [mk for mk in _RESOLVE_MEMO
+                   if mk[0] == path and mk[1] != now]:
+            del _RESOLVE_MEMO[mk]
+        _RESOLVE_MEMO[(path, now, bucket)] = cfg
+    # per-call: validity depends on the exact shape, not the bucket
+    return _validate_for_shape(cfg, m, n, k)

@@ -5,13 +5,20 @@ benchmarks must see the single real CPU device.  Only launch/dryrun.py
 requests 512 placeholder devices (and only in its own process).
 Exception: distributed tests spawn subprocesses / use a small local device
 count set inside those test modules before jax import, never globally.
-"""
-from hypothesis import HealthCheck, settings
 
-settings.register_profile(
-    "repro",
-    deadline=None,  # jit tracing makes first examples slow
-    suppress_health_check=[HealthCheck.too_slow],
-    max_examples=50,
-)
-settings.load_profile("repro")
+``hypothesis`` is optional (declared in the ``test`` extra): when absent,
+the property tests skip individually via tests/_hyp.py instead of the
+whole suite dying at collection.
+"""
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:  # property tests skip via tests/_hyp.py
+    pass
+else:
+    settings.register_profile(
+        "repro",
+        deadline=None,  # jit tracing makes first examples slow
+        suppress_health_check=[HealthCheck.too_slow],
+        max_examples=50,
+    )
+    settings.load_profile("repro")

@@ -11,8 +11,6 @@ import jax.numpy as jnp
 from repro.configs import ARCHS, get_smoke_config
 from repro.models import (
     DotEngine,
-    SHAPES,
-    decode_inputs,
     decode_step,
     forward,
     init_decode_state,

@@ -1,8 +1,7 @@
 """Unit + property tests for SFC index arithmetic (paper §II)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 import jax.numpy as jnp
 

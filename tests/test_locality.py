@@ -1,8 +1,7 @@
 """Tests for schedules, layouts and the locality simulator (paper §IV-A)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 import jax.numpy as jnp
 

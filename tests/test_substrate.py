@@ -5,10 +5,8 @@ import tempfile
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
-import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import (AsyncCheckpointer, latest_step,

@@ -3,8 +3,6 @@ import subprocess
 import sys
 import tempfile
 
-import numpy as np
-import pytest
 
 import jax
 
