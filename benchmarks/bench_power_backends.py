@@ -1,0 +1,67 @@
+"""Power backend probe: detection, meter overhead, modelled readings.
+
+Beyond-paper: the paper reads RAPL on one machine; this repo has to
+produce energy numbers on whatever host it lands on.  Rows report which
+backend auto-detection picked, what one metered region costs in wall
+time per available backend (the meter must be cheap enough for per-step
+use), and the model backend's readings for the paper's workload.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.power import (
+    ModelBackend,
+    NvmlBackend,
+    RaplBackend,
+    WorkloadHints,
+    detect_backend,
+)
+
+from .common import matmul_model, pick
+
+
+def run():
+    rows = []
+    det = detect_backend()
+    avail = {"rapl": RaplBackend.available(), "nvml": NvmlBackend.available(),
+             "model": True}
+    rows.append(("power/detect", 0.0,
+                 f"backend={det.name};available="
+                 + "+".join(k for k, v in avail.items() if v)))
+
+    # counter overhead: one start/stop pair around an empty interval,
+    # per available backend (the per-step hot-path cost of telemetry).
+    # Raw backend calls, not EnergyMeter: run.py wraps this module in a
+    # session meter, and hundreds of nested noop readings would bloat
+    # the JSON artifact's telemetry tree.
+    backends = [ModelBackend()]
+    if avail["rapl"]:
+        backends.append(RaplBackend())
+    if avail["nvml"]:
+        backends.append(NvmlBackend())
+    reps = pick(500, 100)
+    for b in backends:
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            b.stop(b.start(), 0.0, None)
+        per = (time.perf_counter() - t0) / reps
+        rows.append((f"power/counter_overhead/{b.name}", per * 1e6,
+                     f"reps={reps}"))
+
+    # modelled readings for the paper's matmul workload: the numbers the
+    # EnergyMeter produces in a counter-less container
+    mb = ModelBackend()
+    for size in pick((11, 12), (8,)):
+        for sched in ("rowmajor", "morton"):
+            m = matmul_model(size, sched, chips=8)
+            h = WorkloadHints(flops=2.0 * (2 ** size) ** 3,
+                              hbm_bytes=m["traffic"], chips=8)
+            d = mb.stop(None, m["time"], h)
+            tot = sum(d.values())
+            rows.append((
+                f"power/model_reading/{sched}/n=2^{size}",
+                m["time"] * 1e6,
+                f"J={tot:.3f};W={tot / m['time']:.1f};"
+                f"EDP_Js={tot * m['time']:.5f}"))
+    return rows

@@ -5,16 +5,25 @@ CSV (plus model-derived rows where the quantity is not a wall time).
 
 --smoke runs every bench entry at tiny sizes (CI smoke job; modules pick
 sizes via benchmarks.common.pick); --json additionally writes the rows
-as a machine-readable artifact so perf regressions leave a trail.
+as a machine-readable artifact so perf regressions leave a trail.  The
+JSON payload is stamped (schema version, git SHA, jax backend, power
+backend) so ``BENCH_*.json`` files are comparable across PRs, and every
+bench module runs under an ``EnergyMeter`` whose readings are embedded
+as an energy report (validate with ``python -m repro.power.report
+--bench OUT.json``).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 
+# bench payload schema: 1 = {smoke, results}; 2 adds the provenance
+# stamp (git_sha, backend, power_backend) + embedded energy report
+SCHEMA_VERSION = 2
 
 MODULES = [
     "bench_exec_time",        # Table IV
@@ -27,7 +36,27 @@ MODULES = [
     "bench_kernel_traffic",   # beyond-paper kernel reuse mechanisms
     "bench_cached_kernel",    # in-kernel DMA counts (software VMEM cache)
     "bench_roofline",         # §Roofline feed (dry-run artifacts)
+    "bench_power_backends",   # repro.power: detection, overhead, readings
 ]
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            timeout=10)
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _jax_backend() -> str:
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:
+        return "unknown"
 
 
 def main(argv=None) -> None:
@@ -50,6 +79,13 @@ def main(argv=None) -> None:
         # before any bench module import: modules read this via common.pick
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
+    from repro.power import EnergyMeter, EnergyReport, detect_backend
+
+    power = detect_backend()
+    energy = EnergyReport(backend=power.name,
+                          meta={"driver": "benchmarks", "argv": argv or []})
+    print(f"# power backend: {power.name}", file=sys.stderr)
+
     results = {}
     print("name,us_per_call,derived")
     for mod in MODULES:
@@ -57,8 +93,9 @@ def main(argv=None) -> None:
             continue
         t0 = time.time()
         m = importlib.import_module(f"benchmarks.{mod}")
-        rows = [(name, float(us), str(derived))
-                for name, us, derived in m.run()]
+        with EnergyMeter(mod, backend=power, reporter=energy):
+            rows = [(name, float(us), str(derived))
+                    for name, us, derived in m.run()]
         for name, us, derived in rows:
             print(f"{name},{us:.3f},{derived}")
         dt = time.time() - t0
@@ -70,7 +107,15 @@ def main(argv=None) -> None:
         # environment shrinks sizes even without --smoke
         from benchmarks.common import smoke as effective_smoke
 
-        payload = {"smoke": effective_smoke(), "results": results}
+        payload = {
+            "schema_version": SCHEMA_VERSION,
+            "git_sha": _git_sha(),
+            "backend": _jax_backend(),
+            "power_backend": power.name,
+            "smoke": effective_smoke(),
+            "results": results,
+            "energy": energy.to_dict(),
+        }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {args.json}", file=sys.stderr)

@@ -3,7 +3,8 @@
 1. Order a matrix traversal along Morton/Hilbert curves (paper §II);
 2. quantify the locality effect with the block-cache simulator (§IV-A);
 3. run the SFC-scheduled Pallas matmul against the XLA oracle;
-4. put the energy model to work (§IV-B: speed != energy efficiency).
+4. put the energy model to work (§IV-B: speed != energy efficiency);
+5. meter a real region with repro.power and tune for EDP (DESIGN.md §8).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,6 +17,7 @@ from repro.core.curves import hilbert_encode_py, morton_encode_py
 from repro.core.energy import energy_joules
 from repro.kernels.ops import sfc_matmul
 from repro.kernels.ref import matmul_ref
+from repro.power import EnergyMeter, detect_backend
 
 print("=" * 64)
 print("1. Space-filling curve orders over a 4x4 grid (paper Fig. 1)")
@@ -57,3 +59,15 @@ for f in (0.46, 0.69, 1.0):
           f"energy {e['total']:6.2f} J")
 print("   -> time barely improves, energy keeps climbing: the paper's")
 print("      'speed != energy efficiency once memory-bound' in one sweep.")
+
+print("=" * 64)
+print("5. Energy telemetry: meter a region, tune for energy-delay product")
+backend = detect_backend()  # RAPL > NVML > analytic model
+with EnergyMeter("quickstart-gemm", backend=backend,
+                 flops=2.0 * 128 ** 3) as em:
+    sfc_matmul(a, b, schedule="auto", objective="edp").block_until_ready()
+r = em.reading
+print(f"  backend={r.backend}  {r.seconds*1e3:.2f} ms  "
+      f"{r.joules:.4f} J  EDP={r.edp:.3e} J*s")
+print("   -> schedule='auto' adjudicated under objective='edp'; winners")
+print("      cache per-objective, so time- and energy-tuned configs coexist.")

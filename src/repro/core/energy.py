@@ -26,7 +26,14 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-__all__ = ["HW", "TPU_V5E", "RooflineTerms", "roofline_terms", "energy_joules"]
+__all__ = ["HW", "TPU_V5E", "RooflineTerms", "roofline_terms", "energy_joules",
+           "clamp_f_scale", "F_SCALE_MAX"]
+
+# highest supported DVFS point (modest turbo headroom above nominal);
+# both the time and the energy side of the model clamp to the same
+# [f_min, F_SCALE_MAX] range so they can never disagree about which
+# frequency actually ran (regression-tested in tests/test_power.py)
+F_SCALE_MAX = 1.25
 
 
 @dataclass(frozen=True)
@@ -52,9 +59,14 @@ class HW:
 TPU_V5E = HW()
 
 
+def clamp_f_scale(hw: HW, f_scale: float) -> float:
+    """Clamp a requested frequency scale to the supported DVFS range."""
+    return max(hw.f_min, min(f_scale, F_SCALE_MAX))
+
+
 def _voltage(hw: HW, f_scale: float) -> float:
     """Linear V(f) between (f_min, v_min) and (1.0, 1.0), clamped."""
-    f = max(hw.f_min, min(f_scale, 1.25))
+    f = clamp_f_scale(hw, f_scale)
     slope = (1.0 - hw.v_min) / (1.0 - hw.f_min)
     return hw.v_min + slope * (f - hw.f_min)
 
@@ -106,7 +118,7 @@ def roofline_terms(
     *global*; ``ici_bytes`` is the per-chip-busiest-link byte count if known,
     else global/chips is used as the per-chip estimate."""
     return RooflineTerms(
-        t_compute=flops / (chips * hw.peak_flops * f_scale),
+        t_compute=flops / (chips * hw.peak_flops * clamp_f_scale(hw, f_scale)),
         t_hbm=hbm_bytes / (chips * hw.hbm_bw),
         t_ici=ici_bytes / (chips * hw.ici_bw * hw.ici_links),
         t_dcn=dcn_bytes / (max(hosts or chips // 4, 1) * hw.dcn_bw),

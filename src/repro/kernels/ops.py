@@ -43,14 +43,15 @@ def _pad_to(x, mult0: int, mult1: int):
     return x
 
 
-def _resolve_auto(m: int, n: int, k: int, dtype, batched: bool = False):
+def _resolve_auto(m: int, n: int, k: int, dtype, batched: bool = False,
+                  objective: str = "time"):
     """Map schedule="auto" to a concrete (schedule, blocks, prefetch, g).
 
     Imported lazily: the tuner depends on this module for measurement."""
     from repro.tune import resolve_config
 
     cfg = resolve_config(int(m), int(n), int(k), jnp.dtype(dtype).name,
-                         batched=batched)
+                         batched=batched, objective=objective)
     return cfg.schedule, cfg.bm, cfg.bn, cfg.bk, cfg.use_prefetch, cfg.g
 
 
@@ -105,12 +106,15 @@ def sfc_matmul(
     interpret: bool | None = None,
     force_pallas: bool = False,
     g: int = 0,
+    objective: str = "time",
 ):
     """C = A @ B, output tiles visited in ``schedule`` order.
 
     * pads (M, N, K) up to block multiples and crops the result;
     * ``schedule="auto"`` resolves (schedule, block sizes, prefetch)
-      through the autotuner's cache/cost model for this shape bucket;
+      through the autotuner's cache/cost model for this shape bucket,
+      adjudicated under ``objective`` ("time", "energy" or "edp" --
+      DESIGN.md §8; ignored for explicit schedules);
     * ``schedule="xla"`` or a non-TPU backend (unless ``force_pallas``)
       uses the native XLA dot -- the "tuned library" baseline (ATLAS
       analogue in the paper's comparison);
@@ -120,7 +124,8 @@ def sfc_matmul(
     """
     if schedule == "auto":
         schedule, bm, bn, bk, use_prefetch, g = _resolve_auto(
-            a.shape[0], b.shape[1], a.shape[1], a.dtype)
+            a.shape[0], b.shape[1], a.shape[1], a.dtype,
+            objective=objective)
     return _sfc_matmul(
         a, b, schedule=schedule, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
         use_prefetch=use_prefetch, interpret=interpret,
@@ -190,22 +195,25 @@ def sfc_matmul_batched(
     force_pallas: bool = False,
     via_vmap: bool = False,
     g: int = 0,
+    objective: str = "time",
 ):
     """Einsum ``bij,bjk->bik`` with SFC tile traversal per batch element.
 
     ``a``: (..., M, K) and ``b``: (..., K, N) with identical leading
     dims; leading dims are flattened into one batch axis for the 3-D-grid
     kernel and restored on return.  ``schedule="auto"`` consults the
-    autotuner (keyed on the per-element GEMM shape).  ``via_vmap=True``
-    runs the 2-D kernel under ``jax.vmap`` instead of the 3-D grid --
-    the two must agree (tested), and vmap is the fallback for callers
-    that are themselves inside a ``vmap``.
+    autotuner (keyed on the per-element GEMM shape, adjudicated under
+    ``objective``).  ``via_vmap=True`` runs the 2-D kernel under
+    ``jax.vmap`` instead of the 3-D grid -- the two must agree (tested),
+    and vmap is the fallback for callers that are themselves inside a
+    ``vmap``.
     """
     assert a.shape[:-2] == b.shape[:-2], (a.shape, b.shape)
     assert a.shape[-1] == b.shape[-2], (a.shape, b.shape)
     if schedule == "auto":
         schedule, bm, bn, bk, use_prefetch, g = _resolve_auto(
-            a.shape[-2], b.shape[-1], a.shape[-1], a.dtype, batched=True)
+            a.shape[-2], b.shape[-1], a.shape[-1], a.dtype, batched=True,
+            objective=objective)
     return _sfc_matmul_batched(
         a, b, schedule=schedule, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
         use_prefetch=use_prefetch, interpret=interpret,

@@ -22,12 +22,13 @@ import jax.numpy as jnp
 from repro.configs import get_config, get_smoke_config
 from repro.models import DotEngine, decode_step, init_decode_state, \
     init_model
+from repro.power import EnergyMeter, EnergyReport, detect_backend
 
 
 class ServeLoop:
     def __init__(self, cfg, params, *, slots: int = 4, cache_len: int = 128,
                  engine: DotEngine | None = None, temperature: float = 0.0,
-                 eos_id: int = 1, seed: int = 0):
+                 eos_id: int = 1, seed: int = 0, power_backend=None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -42,6 +43,14 @@ class ServeLoop:
         self.out: dict[int, list[int]] = {}
         self.slot_req = [-1] * slots
         self.queue: list[tuple[int, list[int]]] = []
+        # energy telemetry: one reading per decode step, J split evenly
+        # across the slots that were active in it (per-request accounting)
+        self.power = power_backend or detect_backend()
+        self.energy = EnergyReport(backend=self.power.name,
+                                   meta={"driver": "serve", "slots": slots})
+        self.request_joules: dict[int, float] = {}
+        self._tok_flops = 2.0 * sum(
+            int(p.size) for p in jax.tree.leaves(params))
         self._step = jax.jit(
             lambda p, s, t, pos, mask: decode_step(
                 p, cfg, s, t, pos, self.engine, row_mask=mask))
@@ -92,11 +101,21 @@ class ServeLoop:
             for s in range(self.slots):
                 if self.active[s]:
                     toks[s, 0] = self.out[self.slot_req[s]][-1]
-            logits, self.state = self._step(
-                self.params, self.state, jnp.asarray(toks),
-                jnp.asarray(pos, jnp.int32),
-                jnp.asarray(self.active))
-            logits = np.asarray(logits[:, 0], np.float32)
+            n_active = int(self.active.sum())
+            with EnergyMeter("decode-step", backend=self.power,
+                             reporter=self.energy,
+                             flops=self._tok_flops * n_active) as em:
+                logits, self.state = self._step(
+                    self.params, self.state, jnp.asarray(toks),
+                    jnp.asarray(pos, jnp.int32),
+                    jnp.asarray(self.active))
+                logits = np.asarray(logits[:, 0], np.float32)
+            j_per_req = em.reading.joules / max(n_active, 1)
+            for s in range(self.slots):
+                if self.active[s]:
+                    r = self.slot_req[s]
+                    self.request_joules[r] = \
+                        self.request_joules.get(r, 0.0) + j_per_req
             for s in range(self.slots):
                 if not self.active[s]:
                     continue
@@ -121,6 +140,11 @@ def main(argv=None):
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--power-backend", default=None,
+                    choices=["rapl", "nvml", "model"],
+                    help="pin the energy telemetry backend (default: auto)")
+    ap.add_argument("--energy-report", default=None, metavar="PATH",
+                    help="write the per-step energy report JSON here")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -128,7 +152,8 @@ def main(argv=None):
         raise SystemExit(f"{cfg.name} is encoder-only: no serving loop")
     params = init_model(cfg, jax.random.PRNGKey(args.seed))
     loop = ServeLoop(cfg, params, slots=args.slots, cache_len=args.cache_len,
-                     temperature=args.temperature, seed=args.seed)
+                     temperature=args.temperature, seed=args.seed,
+                     power_backend=detect_backend(args.power_backend))
     rng = np.random.default_rng(args.seed)
     for r in range(args.requests):
         prompt = rng.integers(2, cfg.vocab, size=args.prompt_len).tolist()
@@ -137,11 +162,18 @@ def main(argv=None):
     out = loop.run(max_new=args.max_new)
     dt = time.time() - t0
     total_new = sum(len(v) - args.prompt_len for v in out.values())
+    totals = loop.energy.totals()
     print(f"[serve] {args.requests} requests, {total_new} tokens in "
           f"{dt:.2f}s ({total_new / max(dt, 1e-9):.1f} tok/s)")
+    print(f"[serve] energy ({loop.power.name}): {totals['joules']:.2f} J, "
+          f"{totals['joules'] / max(total_new, 1):.3f} J/token")
     for r, toks in sorted(out.items()):
         print(f"  req {r}: {toks[:args.prompt_len]} -> "
-              f"{toks[args.prompt_len:][:8]}...")
+              f"{toks[args.prompt_len:][:8]}... "
+              f"({loop.request_joules.get(r, 0.0):.2f} J)")
+    if args.energy_report:
+        loop.energy.write(args.energy_report)
+        print(f"[serve] wrote energy report to {args.energy_report}")
     return out
 
 

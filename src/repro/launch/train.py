@@ -24,6 +24,7 @@ from repro.models import init_model
 from repro.models.config import ShapeSpec
 from repro.optim import AdamWConfig
 from repro.optim.adamw import init_opt_state
+from repro.power import EnergyMeter, EnergyReport, detect_backend
 from repro.runtime import FailureInjector, StepExecutor, StragglerMonitor
 
 
@@ -45,6 +46,11 @@ def main(argv=None):
     ap.add_argument("--inject-failure-at", type=int, default=None)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--power-backend", default=None,
+                    choices=["rapl", "nvml", "model"],
+                    help="pin the energy telemetry backend (default: auto)")
+    ap.add_argument("--energy-report", default=None, metavar="PATH",
+                    help="write the per-step energy report JSON here")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -111,15 +117,28 @@ def main(argv=None):
     monitor = StragglerMonitor()
     state = {"params": params, "opt": opt_state, "last_loss": None}
 
+    # per-step energy telemetry (DESIGN.md §8): counters where the host
+    # has them, the analytic model (static power x measured step time +
+    # 6*N*tokens FLOPs) in counter-less containers
+    power = detect_backend(args.power_backend)
+    n_params = sum(int(p.size) for p in jax.tree.leaves(params))
+    step_flops = 6.0 * n_params * args.batch * args.seq
+    energy = EnergyReport(backend=power.name, meta={
+        "driver": "train", "arch": args.arch, "steps": args.steps,
+        "batch": args.batch, "seq": args.seq, "params": n_params})
+
     def one_step(state, step):
         _, batch = next(loader_iter)
-        p, o, metrics = step_fn(state["params"], state["opt"], batch)
-        state = {"params": p, "opt": o,
-                 "last_loss": float(metrics["loss"])}
+        with EnergyMeter(f"step-{step}", backend=power, reporter=energy,
+                         flops=step_flops) as em:
+            p, o, metrics = step_fn(state["params"], state["opt"], batch)
+            state = {"params": p, "opt": o,
+                     "last_loss": float(metrics["loss"])}
         if step % args.log_every == 0 or step == start + args.steps - 1:
             print(f"[train] step {step} loss {metrics['loss']:.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "
-                  f"lr {float(metrics['lr']):.2e}", flush=True)
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"E {em.reading.joules:.2f}J", flush=True)
         if ckpt and (step + 1) % args.ckpt_every == 0:
             ckpt.save(step + 1, {"params": p, "opt": o})
         return state
@@ -147,11 +166,18 @@ def main(argv=None):
     t0 = time.time()
     final_state, end_step = executor.run(state, start, args.steps)
     dt = time.time() - t0
+    totals = energy.totals()
     print(f"[train] done: {args.steps} steps in {dt:.1f}s "
           f"({dt / max(args.steps, 1) * 1e3:.0f} ms/step), "
           f"final loss {final_state['last_loss']:.4f}, "
           f"retries {len(executor.retries)}, "
           f"straggler events {len(monitor.events)}")
+    print(f"[train] energy ({power.name}): {totals['joules']:.1f} J total, "
+          f"{totals['joules'] / max(args.steps, 1):.2f} J/step, "
+          f"{totals['joules'] / max(totals['seconds'], 1e-9):.1f} W avg")
+    if args.energy_report:
+        energy.write(args.energy_report)
+        print(f"[train] wrote energy report to {args.energy_report}")
     loader.close()
     if ckpt:
         ckpt.close()

@@ -31,11 +31,16 @@ class DotEngine:
     on disk, analytic cost model otherwise; DESIGN.md §6).  "auto" may
     resolve to the XLA baseline where the model predicts the library
     wins -- the engine stays the single integration point either way.
+
+    objective: the tuner's adjudication metric under schedule="auto" --
+    "time" (default), "energy" (joules), or "edp" (energy-delay
+    product); DESIGN.md §8.  Ignored for explicit schedules.
     """
     schedule: str = "xla"
     block: tuple = (128, 128, 128)
     use_prefetch: bool = True
     interpret: bool = False
+    objective: str = "time"
 
     def dot(self, x, w):
         """x: (..., d_in) @ w: (d_in, d_out) -> (..., d_out)."""
@@ -49,6 +54,7 @@ class DotEngine:
         out = sfc_matmul(
             x2, w, schedule=self.schedule, bm=bm, bn=bn, bk=bk,
             use_prefetch=self.use_prefetch, interpret=self.interpret,
+            objective=self.objective,
         )
         return out.reshape(*lead, w.shape[-1])
 
@@ -65,6 +71,7 @@ class DotEngine:
         return sfc_matmul_batched(
             x, w, schedule=self.schedule, bm=bm, bn=bn, bk=bk,
             use_prefetch=self.use_prefetch, interpret=self.interpret,
+            objective=self.objective,
         )
 
 

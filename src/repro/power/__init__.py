@@ -1,0 +1,19 @@
+# Energy telemetry (DESIGN.md §8): pluggable power backends (RAPL /
+# NVML / analytic model), the EnergyMeter region API, and the session
+# JSON reporter.  The tuner's objective={"time","energy","edp"} support
+# (repro.tune) consumes the same energy model this package meters with.
+from .backends import (  # noqa: F401
+    ModelBackend,
+    NvmlBackend,
+    PowerBackend,
+    RaplBackend,
+    WorkloadHints,
+    detect_backend,
+)
+from .meter import EnergyMeter, EnergyReading, default_backend  # noqa: F401
+from .report import (  # noqa: F401
+    SCHEMA_VERSION,
+    EnergyReport,
+    validate_bench_payload,
+    validate_report,
+)

@@ -1,6 +1,8 @@
 # Autotuning for the SFC GEMM path (DESIGN.md §6): analytic pre-filter
 # over the LRU traffic simulator + index-cost model, measured top-k, and
 # an on-disk winner cache consulted by sfc_matmul(schedule="auto").
+# Winners are adjudicated under a pluggable objective -- wall time,
+# joules, or energy-delay product (DESIGN.md §8).
 from .autotune import (  # noqa: F401
     TuneResult,
     autotune,
@@ -10,3 +12,4 @@ from .autotune import (  # noqa: F401
 )
 from .cache import TuneCache, cache_key, default_cache_path, shape_bucket  # noqa: F401
 from .cost import CostEstimate, TuneConfig, predict, vmem_block_capacity  # noqa: F401
+from .objective import OBJECTIVES, estimate_energy, objective_value  # noqa: F401

@@ -33,6 +33,7 @@ from repro.core.schedule import is_pow2
 
 from .cache import TuneCache, cache_key, default_cache_path
 from .cost import CostEstimate, TuneConfig, predict
+from .objective import OBJECTIVES, objective_value
 
 __all__ = ["TuneResult", "candidate_configs", "autotune", "resolve_config",
            "measure_config"]
@@ -189,17 +190,23 @@ def autotune(
     capacity: int | None = None,
     candidates: list[TuneConfig] | None = None,
     batched: bool = False,
+    objective: str = "time",
 ) -> TuneResult:
     """Pick the best GEMM config for (M, N, K, dtype) on ``backend``.
 
     Cache hit returns immediately.  Otherwise: analytic ranking of the
-    full candidate set, then (``measure``) wall-time adjudication of the
-    ``topk`` survivors, then the winner is persisted.  ``capacity``
-    pins the simulated cache size in blocks (tests); ``refresh`` forces
-    a re-search.
+    full candidate set, then (``measure``) adjudication of the ``topk``
+    survivors, then the winner is persisted.  ``objective`` scores
+    candidates as wall time, joules, or energy-delay product
+    (:mod:`repro.tune.objective`); each objective has its own cache
+    keyspace.  ``capacity`` pins the simulated cache size in blocks
+    (tests); ``refresh`` forces a re-search.
     """
     import jax
 
+    if objective not in OBJECTIVES:
+        raise ValueError(
+            f"unknown objective {objective!r}; choose from {OBJECTIVES}")
     dtype_name = np.dtype(dtype).name if dtype != "bfloat16" else "bfloat16"
     try:
         dtype_bytes = np.dtype(dtype).itemsize
@@ -208,7 +215,8 @@ def autotune(
     backend = backend or jax.default_backend()
     if cache is None:  # NB: empty TuneCache is falsy (__len__), never `or`
         cache = TuneCache()
-    key = cache_key(m, n, k, dtype_name, backend, batched=batched)
+    key = cache_key(m, n, k, dtype_name, backend, batched=batched,
+                    objective=objective)
 
     if not refresh:
         hit = cache.get(key)
@@ -220,7 +228,8 @@ def autotune(
         m, n, k, dtype_bytes=dtype_bytes, hw=hw)
     ests = [predict(c, m, n, k, dtype_bytes, hw=hw, capacity=capacity)
             for c in cands]
-    ests.sort(key=lambda e: (e.time, e.traffic_bytes))
+    ests.sort(key=lambda e: (objective_value(e, objective, hw=hw),
+                             e.traffic_bytes))
 
     if measure is None:
         measure = _should_measure(backend)
@@ -230,13 +239,16 @@ def autotune(
         # XLA fallback for every Pallas candidate (pure noise); interpret
         # mode at least executes the candidate's own kernel
         interpret = interpret or backend != "tpu"
-        best, best_t = None, None
+        best, best_score = None, None
         for e in ests[:max(1, topk)]:
             t = measure_config(e.config, m, n, k, dtype,
                                interpret=interpret, batched=batched)
             measured[repr(e.config)] = t
-            if best_t is None or t < best_t:
-                best, best_t = e.config, t
+            # energy/edp: dynamic terms from the traffic model, static
+            # term from the measured wall time (repro.tune.objective)
+            score = objective_value(e, objective, hw=hw, wall_time=t)
+            if best_score is None or score < best_score:
+                best, best_score = e.config, score
         chosen = best
     else:
         chosen = ests[0].config if ests else TuneConfig()
@@ -246,8 +258,11 @@ def autotune(
         "shape": [int(m), int(n), int(k)],
         "dtype": dtype_name,
         "backend": backend,
+        "objective": objective,
         "measured": measured,
         "predicted_time": ests[0].time if ests else None,
+        "predicted_score": (objective_value(ests[0], objective, hw=hw)
+                            if ests else None),
     }
     cache.put(key, entry)
     return TuneResult(chosen, key, from_cache=False, estimates=ests,
@@ -287,13 +302,16 @@ def resolve_config(
     backend: str | None = None,
     cache: TuneCache | None = None,
     batched: bool = False,
+    objective: str = "time",
 ) -> TuneConfig:
     """Hot-path ``schedule="auto"`` resolution: cached winner or a fresh
     (analytic + measured-on-TPU) search.  Memoised in-process, so after
     first use per shape bucket it is a dict lookup; safe to call at
     trace time (shapes are static).  ``batched`` keys the 3-D-grid
     kernel's winners separately from the 2-D kernel's (different block
-    specs, different optimum)."""
+    specs, different optimum); ``objective`` selects the adjudication
+    metric and keys both the memo and the on-disk cache, so time-tuned
+    winners never leak into an energy/EDP policy."""
     import jax
 
     dtype_name = np.dtype(dtype).name if dtype != "bfloat16" else "bfloat16"
@@ -308,11 +326,12 @@ def resolve_config(
         except OSError:
             return 0
 
-    bucket = cache_key(m, n, k, dtype_name, bk_, batched=batched)
+    bucket = cache_key(m, n, k, dtype_name, bk_, batched=batched,
+                       objective=objective)
     cfg = _RESOLVE_MEMO.get((path, _mtime(), bucket))
     if cfg is None:
         cfg = autotune(m, n, k, dtype, backend=backend, cache=cache,
-                       batched=batched).config
+                       batched=batched, objective=objective).config
         # store under the post-search mtime (a fresh search writes the
         # file) and evict only this path's superseded entries; once all
         # buckets are persisted the mtime stops moving and every shape

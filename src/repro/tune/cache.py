@@ -36,10 +36,17 @@ def shape_bucket(m: int, n: int, k: int) -> tuple[int, int, int]:
 
 
 def cache_key(m: int, n: int, k: int, dtype: str, backend: str,
-              batched: bool = False) -> str:
+              batched: bool = False, objective: str = "time") -> str:
+    """Winner-cache key.  Non-default objectives get their own keyspace
+    (``.../obj=edp``): a winner adjudicated on wall time must never be
+    served to an energy- or EDP-optimising caller; ``"time"`` keeps the
+    historical unsuffixed form so existing caches stay valid."""
     bm_, bn_, bk_ = shape_bucket(m, n, k)
     tag = "bmm" if batched else "mm"
-    return f"{tag}/{bm_}x{bn_}x{bk_}/{dtype}/{backend}"
+    key = f"{tag}/{bm_}x{bn_}x{bk_}/{dtype}/{backend}"
+    if objective != "time":
+        key += f"/obj={objective}"
+    return key
 
 
 class TuneCache:

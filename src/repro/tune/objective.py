@@ -1,0 +1,51 @@
+"""Tuning objectives: time, energy, energy-delay product (DESIGN.md §8).
+
+The paper's headline finding is that the fastest traversal order is not
+automatically the most energy-efficient one -- Morton's index overhead
+is "balanced against its locality and energy efficiency".  The tuner
+therefore adjudicates candidates under a pluggable objective:
+
+* ``"time"``   -- modelled (or measured) wall seconds; the pre-existing
+  behaviour and the default.
+* ``"energy"`` -- joules from the analytic model
+  (:func:`repro.core.energy.energy_joules`) fed with the candidate's
+  FLOPs, its simulated HBM traffic, and its (modelled or measured) wall
+  time for the static-power term.
+* ``"edp"``    -- energy-delay product (J*s), the standard single-number
+  blend of speed and efficiency.
+
+With a measured wall time the dynamic terms still come from the traffic
+model (counters are rarely available where the tuner runs) while the
+static term uses the real time -- the same recipe
+:class:`repro.power.ModelBackend` applies to metered regions.
+"""
+from __future__ import annotations
+
+from repro.core.energy import TPU_V5E, energy_joules
+
+from .cost import CostEstimate
+
+__all__ = ["OBJECTIVES", "estimate_energy", "objective_value"]
+
+OBJECTIVES = ("time", "energy", "edp")
+
+
+def estimate_energy(est: CostEstimate, hw=TPU_V5E,
+                    wall_time: float | None = None) -> dict:
+    """Energy breakdown for one candidate estimate (single chip)."""
+    t = wall_time if wall_time is not None else est.time
+    return energy_joules(est.flops, est.traffic_bytes, 0.0, 1, hw=hw,
+                         wall_time=t)
+
+
+def objective_value(est: CostEstimate, objective: str = "time", hw=TPU_V5E,
+                    wall_time: float | None = None) -> float:
+    """Scalar score (lower is better) of ``est`` under ``objective``."""
+    t = wall_time if wall_time is not None else est.time
+    if objective == "time":
+        return t
+    if objective not in OBJECTIVES:
+        raise ValueError(
+            f"unknown objective {objective!r}; choose from {OBJECTIVES}")
+    e = estimate_energy(est, hw=hw, wall_time=t)["total"]
+    return e if objective == "energy" else e * t
