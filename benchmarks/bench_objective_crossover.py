@@ -1,0 +1,130 @@
+"""Fig. 5/6 crossover, closed through the tuner: sweep arithmetic
+intensity and show the objective-dependent winner diverge.
+
+The paper's headline: once a kernel goes memory-bound, the
+energy-optimal core frequency drops below the time-optimal one (the
+memory system, not the core clock, sets the pace -- downclocking buys a
+quadratic dynamic-energy discount nearly for free).  With the DVFS
+dimension in the tuner's search space (``TuneConfig.f_scale``), that
+crossover is now a *tuning outcome*, not just a model curve:
+
+* ``crossover/<shape>`` rows: per objective (time / energy / edp), the
+  winner's schedule + f_scale + modelled time / J / EDP, as the K
+  dimension sweeps arithmetic intensity from memory-bound (small K,
+  traffic-dominated) to compute-bound (large K);
+* ``crossover/diverges/...``: whether the time winner and the energy
+  winner landed at different DVFS points (the acceptance claim);
+* ``loss_per_joule/<objective>`` rows: a short real training run per
+  objective (same seed, same data), reporting final loss, J/step and
+  the trained loss-drop per joule -- whole-model runs optimising J/step
+  rather than ms/step.
+"""
+from __future__ import annotations
+
+import tempfile
+
+from repro.core.energy import TPU_V5E
+from repro.tune import TuneCache, autotune
+from repro.tune.objective import OBJECTIVES, estimate_energy
+
+from .common import pick
+
+
+def _sweep(cache):
+    rows = []
+    m = n = pick(2048, 512)
+    for k in pick((256, 1024, 4096), (128, 512)):
+        tag = f"{m}x{n}x{k}/bf16"
+        winners = {}
+        for obj in OBJECTIVES:
+            res = autotune(m, n, k, "bfloat16", cache=cache, refresh=True,
+                           measure=False, objective=obj)
+            est = res.best_estimate
+            winners[obj] = res.config
+            e = estimate_energy(est, hw=TPU_V5E)
+            rows.append((
+                f"crossover/{tag}/{obj}", est.time * 1e6,
+                f"sched={res.config.schedule};"
+                f"f_scale={res.config.f_scale:g};"
+                f"E_J={e['total']:.4f};"
+                f"EDP_Js={e['total'] * est.time:.3e}"))
+        rows.append((
+            f"crossover/diverges/{tag}", 0.0,
+            f"time_f={winners['time'].f_scale:g};"
+            f"energy_f={winners['energy'].f_scale:g};"
+            f"diverged="
+            f"{int(winners['time'].f_scale != winners['energy'].f_scale)}"))
+    return rows
+
+
+def _loss_per_joule(cache):
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.data import PackedSyntheticData
+    from repro.launch.steps import make_train_step
+    from repro.models import init_model
+    from repro.models.config import ShapeSpec
+    from repro.optim import AdamWConfig
+    from repro.optim.adamw import init_opt_state
+    from repro.power import EnergyMeter, ModelBackend, WorkloadHints
+    from repro.tune import resolved_f_scale
+
+    cfg = get_smoke_config("qwen3_1_7b")
+    steps = pick(12, 4)
+    batch, seq = pick((8, 64), (4, 32))
+    shape = ShapeSpec("bench-xover", seq_len=seq, global_batch=batch,
+                      kind="train")
+    backend = ModelBackend()
+    rows = []
+    for obj in OBJECTIVES:
+        step_fn = jax.jit(make_train_step(
+            cfg, None, AdamWConfig(peak_lr=3e-3, warmup=2,
+                                   total_steps=steps),
+            objective=obj))
+        params = init_model(cfg, jax.random.PRNGKey(0))
+        opt_state = init_opt_state(params)
+        n_params = sum(int(p.size) for p in jax.tree.leaves(params))
+        hints = WorkloadHints(
+            flops=6.0 * n_params * batch * seq,
+            f_scale=resolved_f_scale(batch * seq, cfg.d_model, cfg.d_model,
+                                     cfg.act_dtype, cache=cache,
+                                     objective=obj))
+        data = PackedSyntheticData(cfg, shape, seed=0)
+        meter = EnergyMeter(f"train-{obj}", backend=backend, hints=hints)
+        first = last = None
+        for i in range(steps):
+            b = data.batch(i)
+            with meter:
+                params, opt_state, metrics = step_fn(params, opt_state, b)
+                jax.block_until_ready(params)
+            last = float(metrics["loss"])
+            first = last if first is None else first
+        joules = sum(r.joules for r in meter.readings)
+        secs = sum(r.seconds for r in meter.readings)
+        rows.append((
+            f"loss_per_joule/{obj}", secs / steps * 1e6,
+            f"f_scale={hints.f_scale:g};final_loss={last:.4f};"
+            f"J_step={joules / steps:.3f};"
+            f"loss_drop_per_kJ={(first - last) / max(joules, 1e-9) * 1e3:.3f}"))
+    return rows
+
+
+def run():
+    # throwaway cache: a bench run must never clobber the user's on-disk
+    # winners (which may hold TPU-measured configs) with analytic ones.
+    # The env var matters too: the training section's DotEngine resolves
+    # every GEMM through default_cache_path(), which honours it
+    import os
+
+    with tempfile.TemporaryDirectory(prefix="repro-bench-xover-") as tmp:
+        cache = TuneCache(tmp + "/tune.json")
+        saved = os.environ.get("REPRO_TUNE_CACHE")
+        os.environ["REPRO_TUNE_CACHE"] = cache.path
+        try:
+            return _sweep(cache) + _loss_per_joule(cache)
+        finally:
+            if saved is None:
+                os.environ.pop("REPRO_TUNE_CACHE", None)
+            else:
+                os.environ["REPRO_TUNE_CACHE"] = saved

@@ -37,6 +37,7 @@ MODULES = [
     "bench_cached_kernel",    # in-kernel DMA counts (software VMEM cache)
     "bench_roofline",         # §Roofline feed (dry-run artifacts)
     "bench_power_backends",   # repro.power: detection, overhead, readings
+    "bench_objective_crossover",  # Fig 5/6 crossover through the tuner
 ]
 
 

@@ -145,6 +145,7 @@ def energy_joules(
                            f_scale=f_scale, dcn_bytes=dcn_bytes)
     t = wall_time if wall_time is not None else (
         terms.t_overlap if overlap else terms.t_serial)
+    f_scale = clamp_f_scale(hw, f_scale)  # breakdown reports what *ran*
     v = _voltage(hw, f_scale)
     core = flops * hw.e_flop * (v * v) / (1.0 * 1.0)
     hbm = hbm_bytes * hw.e_hbm

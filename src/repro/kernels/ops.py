@@ -47,6 +47,11 @@ def _resolve_auto(m: int, n: int, k: int, dtype, batched: bool = False,
                   objective: str = "time"):
     """Map schedule="auto" to a concrete (schedule, blocks, prefetch, g).
 
+    The winner's DVFS dimension (``TuneConfig.f_scale``) is stripped
+    here: it parameterises the tuner's scoring and the launch layer's
+    energy accounting (``repro.tune.resolved_f_scale``), never the
+    kernel launch -- userspace cannot set the device clock.
+
     Imported lazily: the tuner depends on this module for measurement."""
     from repro.tune import resolve_config
 

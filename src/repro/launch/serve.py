@@ -20,20 +20,33 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
+from repro.launch.steps import _engine_for
 from repro.models import DotEngine, decode_step, init_decode_state, \
     init_model
-from repro.power import EnergyMeter, EnergyReport, detect_backend
+from repro.power import EnergyMeter, EnergyReport, WorkloadHints, \
+    detect_backend
 
 
 class ServeLoop:
     def __init__(self, cfg, params, *, slots: int = 4, cache_len: int = 128,
                  engine: DotEngine | None = None, temperature: float = 0.0,
-                 eos_id: int = 1, seed: int = 0, power_backend=None):
+                 eos_id: int = 1, seed: int = 0, power_backend=None,
+                 objective: str | None = None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.cache_len = cache_len
-        self.engine = engine or DotEngine()
+        self.engine = _engine_for(engine, objective)
+        self.objective = objective or "time"
+        # DVFS hint for per-step energy accounting: the tuned operating
+        # point of the decode step's projection GEMM under the objective
+        self.f_scale = 1.0
+        if objective:
+            from repro.tune import resolved_f_scale
+            # same dtype the engine's GEMMs resolve under (bucket match)
+            self.f_scale = resolved_f_scale(slots, cfg.d_model, cfg.d_model,
+                                            cfg.act_dtype,
+                                            objective=objective)
         self.temperature = temperature
         self.eos_id = eos_id
         self.rng = np.random.default_rng(seed)
@@ -47,7 +60,9 @@ class ServeLoop:
         # across the slots that were active in it (per-request accounting)
         self.power = power_backend or detect_backend()
         self.energy = EnergyReport(backend=self.power.name,
-                                   meta={"driver": "serve", "slots": slots})
+                                   meta={"driver": "serve", "slots": slots,
+                                         "objective": self.objective,
+                                         "f_scale": self.f_scale})
         self.request_joules: dict[int, float] = {}
         self._tok_flops = 2.0 * sum(
             int(p.size) for p in jax.tree.leaves(params))
@@ -104,7 +119,9 @@ class ServeLoop:
             n_active = int(self.active.sum())
             with EnergyMeter("decode-step", backend=self.power,
                              reporter=self.energy,
-                             flops=self._tok_flops * n_active) as em:
+                             hints=WorkloadHints(
+                                 flops=self._tok_flops * n_active,
+                                 f_scale=self.f_scale)) as em:
                 logits, self.state = self._step(
                     self.params, self.state, jnp.asarray(toks),
                     jnp.asarray(pos, jnp.int32),
@@ -145,6 +162,11 @@ def main(argv=None):
                     help="pin the energy telemetry backend (default: auto)")
     ap.add_argument("--energy-report", default=None, metavar="PATH",
                     help="write the per-step energy report JSON here")
+    ap.add_argument("--objective", default=None,
+                    choices=["time", "energy", "edp"],
+                    help="route every GEMM through the autotuner "
+                         "adjudicated on this metric (DESIGN.md §8); "
+                         "default keeps the XLA engine")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -153,7 +175,8 @@ def main(argv=None):
     params = init_model(cfg, jax.random.PRNGKey(args.seed))
     loop = ServeLoop(cfg, params, slots=args.slots, cache_len=args.cache_len,
                      temperature=args.temperature, seed=args.seed,
-                     power_backend=detect_backend(args.power_backend))
+                     power_backend=detect_backend(args.power_backend),
+                     objective=args.objective)
     rng = np.random.default_rng(args.seed)
     for r in range(args.requests):
         prompt = rng.integers(2, cfg.vocab, size=args.prompt_len).tolist()
@@ -165,8 +188,12 @@ def main(argv=None):
     totals = loop.energy.totals()
     print(f"[serve] {args.requests} requests, {total_new} tokens in "
           f"{dt:.2f}s ({total_new / max(dt, 1e-9):.1f} tok/s)")
-    print(f"[serve] energy ({loop.power.name}): {totals['joules']:.2f} J, "
-          f"{totals['joules'] / max(total_new, 1):.3f} J/token")
+    n_steps = max(len(loop.energy.readings), 1)
+    print(f"[serve] energy ({loop.power.name}, objective={loop.objective}, "
+          f"f_scale {loop.f_scale:g}): {totals['joules']:.2f} J, "
+          f"{totals['joules'] / max(total_new, 1):.3f} J/token, "
+          f"{totals['joules'] * totals['seconds'] / n_steps ** 2:.3e} "
+          f"Js EDP/step")
     for r, toks in sorted(out.items()):
         print(f"  req {r}: {toks[:args.prompt_len]} -> "
               f"{toks[args.prompt_len:][:8]}... "

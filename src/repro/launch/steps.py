@@ -10,9 +10,16 @@ donation of params/opt-state buffers.
 Both return ``(fn, in_shardings, out_shardings, abstract_inputs)`` so the
 same builders serve real execution (train.py/serve.py) and the dry-run
 (lower+compile only).
+
+Every builder takes ``objective`` ("time" | "energy" | "edp", DESIGN.md
+§8): when no explicit ``engine`` is supplied, it builds a
+``DotEngine(schedule="auto", objective=...)`` so every GEMM in the step
+resolves through the tuner under that adjudication metric -- whole-model
+runs optimising J/step instead of ms/step by flipping one flag.
 """
 from __future__ import annotations
 
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -35,11 +42,35 @@ def _split_microbatches(batch, n):
         lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
 
 
+def _engine_for(engine: DotEngine | None,
+                objective: str | None) -> DotEngine:
+    """Resolve the step's GEMM engine from (engine, objective).
+
+    No objective: the explicit engine, or the XLA default -- the
+    historical behaviour.  An objective with no engine builds the
+    tuner-routed engine under that metric; an objective alongside an
+    explicit engine re-stamps the engine's adjudication metric (the
+    engine is frozen, so this is a copy, never a mutation).
+    """
+    if objective is None:
+        return engine or DotEngine()
+    from repro.tune.objective import OBJECTIVES
+    if objective not in OBJECTIVES:
+        raise ValueError(
+            f"unknown objective {objective!r}; choose from {OBJECTIVES}")
+    if engine is None:
+        return DotEngine(schedule="auto", objective=objective)
+    if engine.objective != objective:
+        return dataclasses.replace(engine, objective=objective)
+    return engine
+
+
 def make_train_step(cfg, mesh, opt_cfg: AdamWConfig, *, grad_accum: int = 1,
                     engine: DotEngine | None = None,
-                    pod_compress: bool = False):
+                    pod_compress: bool = False,
+                    objective: str | None = None):
     """The pure step function (trace-time mesh context included)."""
-    engine = engine or DotEngine()
+    engine = _engine_for(engine, objective)
 
     def grads_of(params, batch):
         def loss_wrap(p):
@@ -145,12 +176,14 @@ def abstract_train_state(cfg, opt_cfg=None, *, pod_compress: bool = False,
 def build_train_step(cfg, mesh, shape_name: str, *,
                      opt_cfg: AdamWConfig | None = None,
                      grad_accum: int = 1, pod_compress: bool = False,
-                     engine: DotEngine | None = None):
+                     engine: DotEngine | None = None,
+                     objective: str | None = None):
     """Returns (jitted_fn, (params_shd, opt_shd, batch_shd), abstract_args)."""
     opt_cfg = opt_cfg or AdamWConfig()
     spec = SHAPES[shape_name]
     step = make_train_step(cfg, mesh, opt_cfg, grad_accum=grad_accum,
-                           pod_compress=pod_compress, engine=engine)
+                           pod_compress=pod_compress, engine=engine,
+                           objective=objective)
 
     pspec = shd.param_specs(cfg)
     pods = mesh.shape.get("pod", 1)
@@ -183,11 +216,10 @@ def build_train_step(cfg, mesh, shape_name: str, *,
 
 # --------------------------------------------------------------- prefill ---
 def build_prefill_step(cfg, mesh, shape_name: str, *,
-                       engine: DotEngine | None = None):
+                       engine: DotEngine | None = None,
+                       objective: str | None = None):
     """Forward-only (inference prefill) step: batch -> logits."""
-    import dataclasses
-
-    engine = engine or DotEngine()
+    engine = _engine_for(engine, objective)
     spec = SHAPES[shape_name]
     icfg = dataclasses.replace(cfg, remat=False)  # no grads -> no remat
 
@@ -214,8 +246,9 @@ def build_prefill_step(cfg, mesh, shape_name: str, *,
 
 
 # ----------------------------------------------------------------- serve ---
-def make_serve_step(cfg, mesh, seq_axes, engine: DotEngine | None = None):
-    engine = engine or DotEngine()
+def make_serve_step(cfg, mesh, seq_axes, engine: DotEngine | None = None,
+                    objective: str | None = None):
+    engine = _engine_for(engine, objective)
 
     def step(params, state, tokens, pos):
         with mesh_context(mesh, seq_axes=seq_axes):
@@ -232,7 +265,8 @@ def abstract_decode_state(cfg, batch: int, cache_len: int):
 
 def build_serve_step(cfg, mesh, shape_name: str, *,
                      engine: DotEngine | None = None,
-                     cache_len: int | None = None):
+                     cache_len: int | None = None,
+                     objective: str | None = None):
     """Returns (jitted_fn, shardings, abstract_args) for one decode step."""
     spec = SHAPES[shape_name]
     b = spec.global_batch
@@ -240,7 +274,8 @@ def build_serve_step(cfg, mesh, shape_name: str, *,
         min(spec.seq_len, cfg.swa_window)
         if cfg.swa_window is not None else spec.seq_len)
     seq_axes = shd.decode_seq_axes(cfg, mesh, b)
-    step = make_serve_step(cfg, mesh, seq_axes, engine=engine)
+    step = make_serve_step(cfg, mesh, seq_axes, engine=engine,
+                           objective=objective)
 
     pspec = shd.param_specs(cfg)
     sspec = shd.decode_state_specs(cfg, mesh, b, cache_len)

@@ -24,8 +24,10 @@ from repro.models import init_model
 from repro.models.config import ShapeSpec
 from repro.optim import AdamWConfig
 from repro.optim.adamw import init_opt_state
-from repro.power import EnergyMeter, EnergyReport, detect_backend
+from repro.power import EnergyMeter, EnergyReport, WorkloadHints, \
+    detect_backend
 from repro.runtime import FailureInjector, StepExecutor, StragglerMonitor
+from repro.tune.objective import OBJECTIVES
 
 
 def main(argv=None):
@@ -51,6 +53,10 @@ def main(argv=None):
                     help="pin the energy telemetry backend (default: auto)")
     ap.add_argument("--energy-report", default=None, metavar="PATH",
                     help="write the per-step energy report JSON here")
+    ap.add_argument("--objective", default=None, choices=list(OBJECTIVES),
+                    help="route every GEMM through the autotuner "
+                         "adjudicated on this metric (DESIGN.md §8); "
+                         "default keeps the XLA engine")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -71,12 +77,14 @@ def main(argv=None):
     if mesh is not None:
         step_fn, (p_shd, o_shd, b_shd), _ = build_train_step(
             cfg, mesh, shape.name, opt_cfg=opt_cfg,
-            grad_accum=args.grad_accum, pod_compress=args.pod_compress)
+            grad_accum=args.grad_accum, pod_compress=args.pod_compress,
+            objective=args.objective)
         moe_pad = mesh.shape["model"]
     else:
         from repro.launch.steps import make_train_step
         step_fn = jax.jit(make_train_step(cfg, None, opt_cfg,
-                                          grad_accum=args.grad_accum))
+                                          grad_accum=args.grad_accum,
+                                          objective=args.objective))
         p_shd = o_shd = b_shd = None
         moe_pad = None
 
@@ -123,14 +131,28 @@ def main(argv=None):
     power = detect_backend(args.power_backend)
     n_params = sum(int(p.size) for p in jax.tree.leaves(params))
     step_flops = 6.0 * n_params * args.batch * args.seq
+    # DVFS hint: the tuned operating point of the model's dominant
+    # projection GEMM (B*S x d_model x d_model) under the objective --
+    # the meter accounts energy at the frequency the tuner selected,
+    # not blindly at nominal
+    f_scale = 1.0
+    if args.objective:
+        from repro.tune import resolved_f_scale
+        # same dtype the engine's GEMMs resolve under, so the hint reads
+        # the winner the tuner actually selected, not a sibling bucket
+        f_scale = resolved_f_scale(args.batch * args.seq, cfg.d_model,
+                                   cfg.d_model, cfg.act_dtype,
+                                   objective=args.objective)
+    step_hints = WorkloadHints(flops=step_flops, f_scale=f_scale)
     energy = EnergyReport(backend=power.name, meta={
         "driver": "train", "arch": args.arch, "steps": args.steps,
-        "batch": args.batch, "seq": args.seq, "params": n_params})
+        "batch": args.batch, "seq": args.seq, "params": n_params,
+        "objective": args.objective or "time", "f_scale": f_scale})
 
     def one_step(state, step):
         _, batch = next(loader_iter)
         with EnergyMeter(f"step-{step}", backend=power, reporter=energy,
-                         flops=step_flops) as em:
+                         hints=step_hints) as em:
             p, o, metrics = step_fn(state["params"], state["opt"], batch)
             state = {"params": p, "opt": o,
                      "last_loss": float(metrics["loss"])}
@@ -138,7 +160,8 @@ def main(argv=None):
             print(f"[train] step {step} loss {metrics['loss']:.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "
                   f"lr {float(metrics['lr']):.2e} "
-                  f"E {em.reading.joules:.2f}J", flush=True)
+                  f"E {em.reading.joules:.2f}J "
+                  f"EDP {em.reading.edp:.3e}Js", flush=True)
         if ckpt and (step + 1) % args.ckpt_every == 0:
             ckpt.save(step + 1, {"params": p, "opt": o})
         return state
@@ -172,8 +195,13 @@ def main(argv=None):
           f"final loss {final_state['last_loss']:.4f}, "
           f"retries {len(executor.retries)}, "
           f"straggler events {len(monitor.events)}")
-    print(f"[train] energy ({power.name}): {totals['joules']:.1f} J total, "
-          f"{totals['joules'] / max(args.steps, 1):.2f} J/step, "
+    n_steps = max(args.steps, 1)
+    print(f"[train] energy ({power.name}, objective="
+          f"{args.objective or 'time'}, f_scale {f_scale:g}): "
+          f"{totals['joules']:.1f} J total, "
+          f"{totals['joules'] / n_steps:.2f} J/step, "
+          f"{totals['joules'] * totals['seconds'] / n_steps ** 2:.3e} "
+          f"Js EDP/step, "
           f"{totals['joules'] / max(totals['seconds'], 1e-9):.1f} W avg")
     if args.energy_report:
         energy.write(args.energy_report)

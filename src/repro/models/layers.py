@@ -34,7 +34,12 @@ class DotEngine:
 
     objective: the tuner's adjudication metric under schedule="auto" --
     "time" (default), "energy" (joules), or "edp" (energy-delay
-    product); DESIGN.md §8.  Ignored for explicit schedules.
+    product); DESIGN.md §8.  Ignored for explicit schedules.  Under
+    "energy"/"edp" the winner also carries a DVFS point
+    (``TuneConfig.f_scale``): that never changes the kernel launch, but
+    launch-layer telemetry reads it back via
+    ``repro.tune.resolved_f_scale`` so J accounting runs at the
+    frequency the objective selected.
     """
     schedule: str = "xla"
     block: tuple = (128, 128, 128)

@@ -7,9 +7,17 @@ from .autotune import (  # noqa: F401
     TuneResult,
     autotune,
     candidate_configs,
+    f_scale_candidates,
     measure_config,
     resolve_config,
+    resolved_f_scale,
 )
 from .cache import TuneCache, cache_key, default_cache_path, shape_bucket  # noqa: F401
-from .cost import CostEstimate, TuneConfig, predict, vmem_block_capacity  # noqa: F401
+from .cost import (  # noqa: F401
+    CostEstimate,
+    TuneConfig,
+    predict,
+    vmem_block_capacity,
+    with_f_scale,
+)
 from .objective import OBJECTIVES, estimate_energy, objective_value  # noqa: F401

@@ -28,15 +28,15 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.energy import TPU_V5E
+from repro.core.energy import F_SCALE_MAX, TPU_V5E, clamp_f_scale
 from repro.core.schedule import is_pow2
 
 from .cache import TuneCache, cache_key, default_cache_path
-from .cost import CostEstimate, TuneConfig, predict
+from .cost import CostEstimate, TuneConfig, predict, with_f_scale
 from .objective import OBJECTIVES, objective_value
 
 __all__ = ["TuneResult", "candidate_configs", "autotune", "resolve_config",
-           "measure_config"]
+           "measure_config", "f_scale_candidates", "resolved_f_scale"]
 
 _BLOCK_CANDIDATES = (
     (128, 128, 128),
@@ -48,6 +48,25 @@ _BLOCK_CANDIDATES = (
 _SCHEDULE_CANDIDATES = ("rowmajor", "boustrophedon", "morton", "hilbert",
                         "supertile")
 _SUPERTILE_G = (2, 4, 8)
+
+
+def f_scale_candidates(hw=TPU_V5E) -> tuple[float, ...]:
+    """The DVFS dimension of the search space: a small grid spanning
+    [hw.f_min, F_SCALE_MAX] (clamped, deduped, nominal always present).
+
+    Four points suffice because the model's energy-vs-f curve is convex
+    piecewise (quadratic core discount vs linear static/time penalty
+    once compute-bound): min, the f_min..nominal midpoint, nominal, and
+    the turbo ceiling bracket the optimum on either side of the paper's
+    Fig. 5/6 crossover.
+    """
+    raw = (hw.f_min, (hw.f_min + 1.0) / 2.0, 1.0, F_SCALE_MAX)
+    out: list[float] = []
+    for f in raw:
+        f = clamp_f_scale(hw, f)
+        if f not in out:
+            out.append(f)
+    return tuple(out)
 
 
 def _timeit(fn, *args, reps: int = 5, warmup: int = 2) -> float:
@@ -191,6 +210,7 @@ def autotune(
     candidates: list[TuneConfig] | None = None,
     batched: bool = False,
     objective: str = "time",
+    f_scales: tuple[float, ...] | None = None,
 ) -> TuneResult:
     """Pick the best GEMM config for (M, N, K, dtype) on ``backend``.
 
@@ -201,6 +221,18 @@ def autotune(
     (:mod:`repro.tune.objective`); each objective has its own cache
     keyspace.  ``capacity`` pins the simulated cache size in blocks
     (tests); ``refresh`` forces a re-search.
+
+    The search space is every kernel candidate crossed with the DVFS
+    grid (``f_scales``, default :func:`f_scale_candidates`; pass ``()``
+    to pin candidates at their own frequency).  Each kernel config pays
+    one LRU replay -- frequency variants are re-derived analytically
+    (:func:`repro.tune.cost.with_f_scale`) -- so widening the space by
+    the frequency axis costs sort time, not simulation time.  Wall-time
+    measurement runs at the host's actual (nominal) frequency, since
+    userspace cannot set the DVFS point of the accelerator it is
+    timing: ``objective="time"`` adjudicates on the raw measurement,
+    while energy/EDP scoring scales the nominal measurement by the
+    model's own DVFS slowdown ratio for the static term.
     """
     import jax
 
@@ -226,8 +258,24 @@ def autotune(
 
     cands = candidates if candidates is not None else candidate_configs(
         m, n, k, dtype_bytes=dtype_bytes, hw=hw)
-    ests = [predict(c, m, n, k, dtype_bytes, hw=hw, capacity=capacity)
-            for c in cands]
+    # one LRU replay per kernel config; DVFS variants derived analytically
+    base: dict[TuneConfig, CostEstimate] = {}
+    for c in cands:
+        kc = c.kernel_config()
+        if kc not in base:
+            base[kc] = predict(kc, m, n, k, dtype_bytes, hw=hw,
+                               capacity=capacity)
+    fs = f_scale_candidates(hw) if f_scales is None else tuple(
+        clamp_f_scale(hw, f) for f in f_scales)
+    ests = []
+    seen: set[TuneConfig] = set()
+    for c in cands:
+        b = base[c.kernel_config()]
+        for f in dict.fromkeys((clamp_f_scale(hw, c.f_scale),) + fs):
+            e = with_f_scale(b, f, hw=hw)
+            if e.config not in seen:
+                seen.add(e.config)
+                ests.append(e)
     ests.sort(key=lambda e: (objective_value(e, objective, hw=hw),
                              e.traffic_bytes))
 
@@ -241,11 +289,24 @@ def autotune(
         interpret = interpret or backend != "tpu"
         best, best_score = None, None
         for e in ests[:max(1, topk)]:
-            t = measure_config(e.config, m, n, k, dtype,
-                               interpret=interpret, batched=batched)
-            measured[repr(e.config)] = t
-            # energy/edp: dynamic terms from the traffic model, static
-            # term from the measured wall time (repro.tune.objective)
+            kc = e.config.kernel_config()
+            t_nom = measured.get(repr(kc))
+            if t_nom is None:
+                t_nom = measure_config(kc, m, n, k, dtype,
+                                       interpret=interpret, batched=batched)
+                measured[repr(kc)] = t_nom
+            # the host runs at nominal frequency.  objective="time"
+            # therefore adjudicates on the *raw* measurement: a DVFS
+            # point the device cannot actually switch to must never let
+            # a measurably slower kernel outscore a faster one.  For
+            # energy/edp the hypothetical operating point is the whole
+            # question, so the static term uses the nominal measurement
+            # scaled by the model's own DVFS slowdown ratio.
+            if objective == "time" or e.config.f_scale == 1.0:
+                t = t_nom
+            else:
+                b = base[kc]
+                t = t_nom * (e.time / b.time)
             score = objective_value(e, objective, hw=hw, wall_time=t)
             if best_score is None or score < best_score:
                 best, best_score = e.config, score
@@ -253,6 +314,10 @@ def autotune(
     else:
         chosen = ests[0].config if ests else TuneConfig()
 
+    # provenance: the *chosen* config's own estimate (measurement may
+    # have overturned the analytic ranking); the analytic front-runner
+    # is kept under its own key for tuner forensics
+    chosen_est = next((e for e in ests if e.config == chosen), None)
     entry = {
         "config": chosen.to_dict(),
         "shape": [int(m), int(n), int(k)],
@@ -260,9 +325,14 @@ def autotune(
         "backend": backend,
         "objective": objective,
         "measured": measured,
-        "predicted_time": ests[0].time if ests else None,
-        "predicted_score": (objective_value(ests[0], objective, hw=hw)
-                            if ests else None),
+        "predicted_time": chosen_est.time if chosen_est else None,
+        "predicted_score": (objective_value(chosen_est, objective, hw=hw)
+                            if chosen_est else None),
+        "analytic_best": ({
+            "config": ests[0].config.to_dict(),
+            "predicted_time": ests[0].time,
+            "predicted_score": objective_value(ests[0], objective, hw=hw),
+        } if ests else None),
     }
     cache.put(key, entry)
     return TuneResult(chosen, key, from_cache=False, estimates=ests,
@@ -290,6 +360,9 @@ def _validate_for_shape(cfg: TuneConfig, m: int, n: int,
     mt, nt = -(-m // cfg.bm), -(-n // cfg.bn)
     if cfg.schedule in ("morton", "hilbert") and mt == nt and is_pow2(mt):
         return cfg
+    # NB: replace() keeps every other field -- in particular the tuned
+    # f_scale, which is a property of the objective, not of the decode
+    # mechanism being swapped here (regression-tested)
     return dataclasses.replace(cfg, use_prefetch=True)
 
 
@@ -343,3 +416,26 @@ def resolve_config(
         _RESOLVE_MEMO[(path, now, bucket)] = cfg
     # per-call: validity depends on the exact shape, not the bucket
     return _validate_for_shape(cfg, m, n, k)
+
+
+def resolved_f_scale(
+    m: int,
+    n: int,
+    k: int,
+    dtype="float32",
+    *,
+    backend: str | None = None,
+    cache: TuneCache | None = None,
+    batched: bool = False,
+    objective: str = "time",
+) -> float:
+    """The DVFS operating point of the tuned winner for this shape.
+
+    Launch-layer consumers (train.py / serve.py) feed this into their
+    per-step :class:`~repro.power.EnergyMeter` hints so the telemetry
+    accounts energy at the frequency the objective actually selected,
+    not blindly at nominal.  Delegates to :func:`resolve_config`, so it
+    shares the memo/cache and is safe to call once at startup.
+    """
+    return resolve_config(m, n, k, dtype, backend=backend, cache=cache,
+                          batched=batched, objective=objective).f_scale

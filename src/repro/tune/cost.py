@@ -27,14 +27,16 @@ shrinking the grid.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import asdict, dataclass, field
 
 from repro.core.curves import hilbert_index_cost_ops, morton_index_cost_ops
-from repro.core.energy import TPU_V5E
+from repro.core.energy import TPU_V5E, clamp_f_scale
 from repro.core.locality import matmul_hbm_traffic
 from repro.core.schedule import grid_schedule, schedule_extra_kwargs
 
-__all__ = ["TuneConfig", "CostEstimate", "predict", "vmem_block_capacity"]
+__all__ = ["TuneConfig", "CostEstimate", "predict", "vmem_block_capacity",
+           "with_f_scale"]
 
 # scalar-unit rate used for index-decode overhead (matches benchmarks/common)
 _SCALAR_OPS_PER_S = 0.94e9
@@ -56,7 +58,11 @@ class TuneConfig:
 
     ``schedule="xla"`` is the tuned-library baseline (no Pallas kernel);
     ``g`` is the supertile factor and only meaningful for
-    ``schedule="supertile"``.
+    ``schedule="supertile"``.  ``f_scale`` is the DVFS operating point
+    the candidate is scored at (DESIGN.md §8): it changes the modelled
+    compute/index time and the dynamic compute energy, never the kernel
+    code, so the paper's Fig. 5/6 "energy-optimal frequency < time-optimal
+    frequency once memory-bound" crossover is searchable.
     """
 
     schedule: str = "morton"
@@ -65,18 +71,28 @@ class TuneConfig:
     bk: int = 128
     use_prefetch: bool = True
     g: int = 0
+    f_scale: float = 1.0
 
     def to_dict(self) -> dict:
         return asdict(self)
 
     @classmethod
     def from_dict(cls, d: dict) -> "TuneConfig":
+        # pre-DVFS cache entries carry no f_scale -> nominal frequency
         return cls(**{k: d[k] for k in
-                      ("schedule", "bm", "bn", "bk", "use_prefetch", "g")
+                      ("schedule", "bm", "bn", "bk", "use_prefetch", "g",
+                       "f_scale")
                       if k in d})
 
     def schedule_kwargs(self) -> dict:
         return schedule_extra_kwargs(self.schedule, self.g)
+
+    def kernel_config(self) -> "TuneConfig":
+        """The candidate with the DVFS dimension stripped: what the
+        kernel launch actually keys on (and what gets wall-timed)."""
+        if self.f_scale == 1.0:
+            return self
+        return dataclasses.replace(self, f_scale=1.0)
 
 
 @dataclass(frozen=True)
@@ -131,7 +147,11 @@ def predict(
     nt = -(-n // bn)
     kt = -(-k // bk)
     flops = 2.0 * m * n * k
-    t_compute = flops / hw.peak_flops
+    # DVFS: compute rate (MXU and scalar unit) scales with core clock,
+    # HBM bandwidth does not (core/energy.py) -- lowering f only costs
+    # time once t_compute(f) crosses t_hbm
+    f = clamp_f_scale(hw, cfg.f_scale)
+    t_compute = flops / (hw.peak_flops * f)
 
     if cfg.schedule == "xla":
         # tuned-library baseline: assume near-roofline traffic (each
@@ -169,7 +189,7 @@ def predict(
     t_index = 0.0
     if not cfg.use_prefetch:
         t_index = t_tiles * kt * _index_ops(cfg.schedule, mt, nt) \
-            / _SCALAR_OPS_PER_S
+            / (_SCALAR_OPS_PER_S * f)
 
     return CostEstimate(
         cfg,
@@ -181,4 +201,29 @@ def predict(
         flops,
         extras={"misses": r["misses"] * scale, "probe_tiles": len(probe),
                 "grid": (mt, nt, kt), "capacity": capacity},
+    )
+
+
+def with_f_scale(est: CostEstimate, f_scale: float,
+                 hw=TPU_V5E) -> CostEstimate:
+    """Re-derive ``est`` at a different DVFS point without re-simulating.
+
+    Traffic is frequency-invariant; compute and index time scale as 1/f
+    (MXU and scalar unit on the core clock), memory time is untouched.
+    This is what lets the autotuner expand every kernel candidate over
+    the whole frequency grid at the cost of ONE LRU replay.
+    """
+    f_new = clamp_f_scale(hw, f_scale)
+    f_old = clamp_f_scale(hw, est.config.f_scale)
+    if f_new == f_old:
+        return est
+    ratio = f_old / f_new
+    t_compute = est.t_compute * ratio
+    t_index = est.t_index * ratio
+    return dataclasses.replace(
+        est,
+        config=dataclasses.replace(est.config, f_scale=f_new),
+        time=max(t_compute, est.t_hbm) + t_index,
+        t_compute=t_compute,
+        t_index=t_index,
     )

@@ -32,10 +32,16 @@ OBJECTIVES = ("time", "energy", "edp")
 
 def estimate_energy(est: CostEstimate, hw=TPU_V5E,
                     wall_time: float | None = None) -> dict:
-    """Energy breakdown for one candidate estimate (single chip)."""
+    """Energy breakdown for one candidate estimate (single chip).
+
+    The candidate's DVFS point (``est.config.f_scale``) feeds the
+    voltage-scaled dynamic-compute term: a lower frequency buys a
+    quadratic core-energy discount, paid for in time only once the
+    candidate goes compute-bound -- the paper's crossover mechanism.
+    """
     t = wall_time if wall_time is not None else est.time
     return energy_joules(est.flops, est.traffic_bytes, 0.0, 1, hw=hw,
-                         wall_time=t)
+                         f_scale=est.config.f_scale, wall_time=t)
 
 
 def objective_value(est: CostEstimate, objective: str = "time", hw=TPU_V5E,

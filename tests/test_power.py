@@ -283,6 +283,27 @@ def test_frequency_clamp_shared_between_time_and_energy():
     assert clamp_f_scale(hw, 0.9) == 0.9  # in-range values untouched
 
 
+def test_energy_breakdown_reports_clamped_f_scale():
+    """Regression: the breakdown dict used to echo the *raw* requested
+    f_scale while the time/voltage terms used the clamped one -- a
+    caller logging breakdown["f_scale"] recorded a frequency that never
+    ran."""
+    hw = TPU_V5E
+    over = energy_joules(1e12, 1e9, 0.0, 1, hw, f_scale=3.0)
+    assert over["f_scale"] == F_SCALE_MAX
+    under = energy_joules(1e12, 1e9, 0.0, 1, hw, f_scale=0.01)
+    assert under["f_scale"] == hw.f_min
+    # the whole breakdown is indistinguishable from asking for the
+    # clamped value directly
+    assert over == energy_joules(1e12, 1e9, 0.0, 1, hw,
+                                 f_scale=F_SCALE_MAX)
+    assert under == energy_joules(1e12, 1e9, 0.0, 1, hw,
+                                  f_scale=hw.f_min)
+    # in-range values pass through untouched
+    assert energy_joules(1e12, 1e9, 0.0, 1, hw,
+                         f_scale=0.8)["f_scale"] == 0.8
+
+
 # --------------------------------------------------- objective-aware tuning
 _EDP_HW = dataclasses.replace(
     TPU_V5E, name="edp-demo", peak_flops=1e18, hbm_bw=1.5e12,

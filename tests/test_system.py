@@ -4,6 +4,8 @@ import sys
 import tempfile
 
 
+import pytest
+
 import jax
 
 from repro.launch.serve import ServeLoop
@@ -51,6 +53,66 @@ def test_serve_loop_emits_tokens():
     # the same prompt (req 2 is admitted later: its RoPE positions differ
     # under lockstep decode -- see ServeLoop docstring note)
     assert out[0] == out[1]
+
+
+@pytest.fixture
+def isolated_tune_cache(tmp_path, monkeypatch):
+    """Objective-driven runs resolve through the autotuner: keep their
+    winner cache out of the user's real one."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tune.json"))
+
+
+def test_engine_for_objective_threading(isolated_tune_cache):
+    """The launch layer's engine resolution: objective=None keeps the
+    historical XLA default; an objective builds (or re-stamps) the
+    tuner-routed engine."""
+    from repro.launch.steps import _engine_for
+    from repro.models import DotEngine
+
+    assert _engine_for(None, None).schedule == "xla"
+    eng = DotEngine(schedule="morton")
+    assert _engine_for(eng, None) is eng
+    auto = _engine_for(None, "energy")
+    assert auto.schedule == "auto" and auto.objective == "energy"
+    restamped = _engine_for(eng, "edp")
+    assert restamped.schedule == "morton" and restamped.objective == "edp"
+    assert eng.objective == "time"  # frozen original untouched
+    with pytest.raises(ValueError):
+        _engine_for(None, "joules")
+
+
+def test_train_with_edp_objective_smoke(isolated_tune_cache, capsys):
+    """Acceptance: train --objective edp --smoke runs end-to-end and the
+    summary carries per-step J and EDP."""
+    state = train_main([
+        "--arch", "qwen3_1_7b", "--smoke", "--steps", "4",
+        "--batch", "4", "--seq", "32", "--objective", "edp",
+        "--log-every", "2"])
+    assert state["last_loss"] is not None
+    out = capsys.readouterr().out
+    assert "objective=edp" in out
+    assert "J/step" in out and "EDP/step" in out
+
+
+def test_serve_with_energy_objective(isolated_tune_cache):
+    """Acceptance: the serve loop under an energy objective decodes
+    correctly and accounts per-request joules at the tuned f_scale."""
+    from repro.configs import get_smoke_config
+    from repro.models import init_model
+
+    cfg = get_smoke_config("qwen3_1_7b")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    loop = ServeLoop(cfg, params, slots=2, cache_len=64,
+                     objective="energy")
+    assert loop.engine.schedule == "auto"
+    assert loop.engine.objective == "energy"
+    assert 0 < loop.f_scale <= 1.25
+    for r in range(2):
+        loop.submit(r, [5, 6, 7, 8])
+    out = loop.run(max_new=4)
+    assert set(out) == {0, 1}
+    assert all(loop.request_joules[r] > 0 for r in out)
+    assert loop.energy.meta["objective"] == "energy"
 
 
 def test_benchmark_driver_runs():
