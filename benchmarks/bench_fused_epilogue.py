@@ -1,0 +1,90 @@
+"""Fused-epilogue SFC GEMM vs dot-then-elementwise (DESIGN.md §9).
+
+Sweeps MLP-shaped GEMMs (up-projection with bias+GELU, down-projection
+with residual -- the transformer's two hottest epilogue sites) and
+reports, per shape:
+
+* measured wall time of the fused entry point vs the unfused
+  composition (on CPU both run the XLA fallback, so the delta is what
+  XLA's own fusion leaves on the table; on TPU the fused row runs the
+  Pallas flush epilogue);
+* modeled HBM bytes of the fused kernel vs the unfused pipeline (the
+  eliminated C re-read/re-write + separate bias read);
+* modeled J for both, through the same analytic backend the tuner uses.
+
+The modeled rows are the regression surface: fused bytes/J must stay
+strictly below unfused for every swept shape.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels.ops import sfc_matmul
+from repro.kernels.ref import apply_activation
+from repro.tune.cost import EpilogueSpec, TuneConfig, predict
+from repro.tune.objective import estimate_energy
+
+from .common import pick, timeit
+
+
+def _mlp_shapes():
+    # (tokens, d_model, d_ff): up-proj is (T, d) x (d, ff), down-proj is
+    # (T, ff) x (ff, d)
+    t, d, ff = pick((2048, 1024, 4096), (128, 64, 128))
+    return [
+        ("up_bias_gelu", t, ff, d, EpilogueSpec(bias=True,
+                                                activation="gelu")),
+        ("down_residual", t, d, ff, EpilogueSpec(residual=True)),
+        ("out_proj_res", t, d, d, EpilogueSpec(residual=True)),
+    ]
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    sched = pick("morton", "rowmajor")
+    for name, m, n, k, ep in _mlp_shapes():
+        a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        bias = jnp.asarray(rng.standard_normal((n,)), jnp.float32) \
+            if ep.bias else None
+        res = jnp.asarray(rng.standard_normal((m, n)), jnp.float32) \
+            if ep.residual else None
+
+        def fused(a, b):
+            return sfc_matmul(a, b, schedule=sched, bias=bias,
+                              activation=ep.activation, residual=res)
+
+        def unfused(a, b):
+            out = sfc_matmul(a, b, schedule=sched)
+            if bias is not None:
+                out = out + bias
+            out = apply_activation(out, ep.activation)
+            if res is not None:
+                out = out + res
+            return out
+
+        t_f = timeit(fused, a, b, reps=3, warmup=1)
+        t_u = timeit(unfused, a, b, reps=3, warmup=1)
+        rows.append((f"fused_epilogue/time/{name}/fused", t_f * 1e6,
+                     f"speedup={t_u / max(t_f, 1e-12):.3f}"))
+        rows.append((f"fused_epilogue/time/{name}/unfused", t_u * 1e6,
+                     f"epilogue={ep.tag()}"))
+
+        cfg = TuneConfig(schedule=sched)
+        est_f = predict(cfg, m, n, k, 4, epilogue=ep, fuse_epilogue=True)
+        est_u = predict(cfg, m, n, k, 4, epilogue=ep, fuse_epilogue=False)
+        j_f = estimate_energy(est_f)["total"]
+        j_u = estimate_energy(est_u)["total"]
+        assert est_f.traffic_bytes < est_u.traffic_bytes, (name, est_f,
+                                                           est_u)
+        assert j_f < j_u, (name, j_f, j_u)
+        rows.append((
+            f"fused_epilogue/model/{name}", 0.0,
+            f"fused_MB={est_f.traffic_bytes / 1e6:.4f};"
+            f"unfused_MB={est_u.traffic_bytes / 1e6:.4f};"
+            f"saved_MB={(est_u.traffic_bytes - est_f.traffic_bytes) / 1e6:.4f};"
+            f"fused_J={j_f:.4e};unfused_J={j_u:.4e}"))
+    return rows

@@ -1,12 +1,14 @@
 """One function per paper table/figure.  Prints ``name,us_per_call,derived``
 CSV (plus model-derived rows where the quantity is not a wall time).
 
-    python -m benchmarks.run [--smoke] [--json OUT.json] [module ...]
+    python -m benchmarks.run [--smoke] [--json [OUT.json]] [module ...]
 
 --smoke runs every bench entry at tiny sizes (CI smoke job; modules pick
 sizes via benchmarks.common.pick); --json additionally writes the rows
-as a machine-readable artifact so perf regressions leave a trail.  The
-JSON payload is stamped (schema version, git SHA, jax backend, power
+as a machine-readable artifact so perf regressions leave a trail.
+``--json`` without a path writes ``BENCH_<git_sha>.json`` at the repo
+root -- the canonical per-commit perf-trajectory artifact CI uploads.
+The JSON payload is stamped (schema version, git SHA, jax backend, power
 backend) so ``BENCH_*.json`` files are comparable across PRs, and every
 bench module runs under an ``EnergyMeter`` whose readings are embedded
 as an energy report (validate with ``python -m repro.power.report
@@ -22,8 +24,10 @@ import sys
 import time
 
 # bench payload schema: 1 = {smoke, results}; 2 adds the provenance
-# stamp (git_sha, backend, power_backend) + embedded energy report
-SCHEMA_VERSION = 2
+# stamp (git_sha, backend, power_backend) + embedded energy report;
+# 3 adds the fused-epilogue rows (bench_fused_epilogue) and the
+# BENCH_<git_sha>.json default artifact path
+SCHEMA_VERSION = 3
 
 MODULES = [
     "bench_exec_time",        # Table IV
@@ -38,6 +42,7 @@ MODULES = [
     "bench_roofline",         # §Roofline feed (dry-run artifacts)
     "bench_power_backends",   # repro.power: detection, overhead, readings
     "bench_objective_crossover",  # Fig 5/6 crossover through the tuner
+    "bench_fused_epilogue",   # DESIGN.md §9: fused vs unfused epilogue
 ]
 
 
@@ -66,10 +71,22 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes, every bench entry (CI smoke job)")
-    ap.add_argument("--json", metavar="PATH", default=None,
-                    help="also write results as JSON to PATH")
+    ap.add_argument("--json", metavar="PATH", default=None, nargs="?",
+                    const="auto",
+                    help="also write results as JSON to PATH; with no "
+                         "PATH, write BENCH_<git_sha>.json at the repo "
+                         "root (the CI perf-trajectory artifact)")
     ap.add_argument("only", nargs="*", help="subset of bench modules")
     args = ap.parse_args(argv)
+    if args.json in MODULES:
+        # bare `--json bench_foo`: argparse greedily binds the module name
+        # as the output PATH (nargs="?" footgun) -- reclaim it as a module
+        # selection and fall through to the default artifact path
+        args.only.insert(0, args.json)
+        args.json = "auto"
+    if args.json == "auto":
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        args.json = os.path.join(root, f"BENCH_{_git_sha()}.json")
 
     unknown = sorted(set(args.only) - set(MODULES))
     if unknown:

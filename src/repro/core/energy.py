@@ -19,6 +19,16 @@ mechanism behind the paper's "speed != energy efficiency once memory-bound"
 finding; the model reproduces it by construction, and the benchmarks verify
 the crossover points quantitatively.
 
+``hbm_bytes``/``flops`` are *caller-supplied* workload terms: for tuned
+GEMMs they come from :mod:`repro.tune.cost`, which accounts the fused
+epilogue (DESIGN.md §9) -- a fused bias/activation/residual drops the
+post-matmul C re-read/re-write passes from ``hbm_bytes`` (and their
+elementwise ops ride ``flops``), so the J and EDP this module reports for
+a fused kernel are lower by exactly the eliminated traffic's
+``e_hbm``-weighted energy.  Nothing here special-cases fusion: the
+contract is that callers pass the traffic their pipeline *actually*
+generates.
+
 Constants are documented estimates (DESIGN.md §7); all *validated* claims
 are relative, so they survive any sane constant choice.
 """

@@ -11,6 +11,8 @@ scalar prefetch, or replayed through the locality simulator.
 """
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 
 from .curves import hilbert_decode_py, morton_decode_py
@@ -153,17 +155,32 @@ SCHEDULES = {
 }
 
 
-def grid_schedule(name: str, rows: int, cols: int, **kw) -> np.ndarray:
-    """Return the (T, 2) visit order of ``name`` over a rows x cols grid."""
-    try:
-        fn = SCHEDULES[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown schedule {name!r}; choose from {sorted(SCHEDULES)}"
-        ) from None
-    sched = fn(rows, cols, **kw)
+@functools.lru_cache(maxsize=512)
+def _grid_schedule_cached(name: str, rows: int, cols: int,
+                          kw_items: tuple) -> np.ndarray:
+    fn = SCHEDULES[name]
+    sched = fn(rows, cols, **dict(kw_items))
     assert sched.shape == (rows * cols, 2), (name, sched.shape)
+    # the cached array is shared by every caller (kernels re-upload it as
+    # the prefetch table, the tuner replays it through the LRU sim) --
+    # freeze it so an accidental in-place edit cannot poison the memo
+    sched.setflags(write=False)
     return sched
+
+
+def grid_schedule(name: str, rows: int, cols: int, **kw) -> np.ndarray:
+    """Return the (T, 2) visit order of ``name`` over a rows x cols grid.
+
+    Memoised on (name, rows, cols, kwargs): schedule construction is
+    pure-Python curve decoding, and the hot paths (every kernel trace,
+    every cost-model candidate) ask for the same handful of tables over
+    and over -- repeated traces must not recompute or re-upload
+    identical (T, 2) tables.  The returned array is read-only.
+    """
+    if name not in SCHEDULES:
+        raise ValueError(
+            f"unknown schedule {name!r}; choose from {sorted(SCHEDULES)}")
+    return _grid_schedule_cached(name, rows, cols, tuple(sorted(kw.items())))
 
 
 def matmul_block_trace(

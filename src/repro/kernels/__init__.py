@@ -2,7 +2,13 @@
 # matmul with SFC grid traversal (sfc_matmul.py), the software-VMEM-cache
 # variant (sfc_matmul_cached.py), jit wrappers (ops.py), oracles (ref.py).
 from .ops import sfc_matmul, sfc_matmul_batched  # noqa: F401
-from .ref import matmul_batched_ref, matmul_ref  # noqa: F401
+from .ref import (  # noqa: F401
+    apply_epilogue_ref,
+    matmul_batched_fused_ref,
+    matmul_batched_ref,
+    matmul_fused_ref,
+    matmul_ref,
+)
 from .sfc_matmul import (  # noqa: F401
     sfc_matmul_batched_pallas,
     sfc_matmul_pallas,

@@ -5,16 +5,30 @@ can be routed through it (see ``repro.models.layers.DotEngine``).  On
 non-TPU backends it falls back to XLA dot by default (the Pallas kernel is
 TPU-targeted; ``interpret=True`` runs it on CPU for tests).
 
+Both entry points carry the **fused epilogue** (DESIGN.md §9): optional
+``bias=`` / ``activation=`` / ``residual=`` are applied to the kernel's
+f32 accumulator inside the last-k flush -- one cast, one HBM write, no
+post-matmul elementwise passes.  The XLA fallback reproduces the exact
+same math (``repro.kernels.ref.matmul_fused_ref``), so callers never
+branch on backend.
+
 ``schedule="auto"`` consults the autotuner (``repro.tune``, DESIGN.md §6):
-the (shape-bucket, dtype, backend) winner comes from the on-disk cache
-when present, otherwise from the analytic cost model (plus wall-time
-adjudication on real TPU hardware).  Resolution uses only static shape /
-dtype information, so it is safe at trace time.
+the (shape-bucket, dtype, backend, epilogue) winner comes from the
+on-disk cache when present, otherwise from the analytic cost model (plus
+wall-time adjudication on real TPU hardware).  The epilogue is part of
+the tuning key because fusion changes the traffic the candidate
+generates -- and therefore which block sizes win.  Resolution uses only
+static shape / dtype information, so it is safe at trace time.
 
 ``sfc_matmul_batched`` is the einsum-style ``bij,bjk->bik`` entry: any
 number of leading batch dims, executed by a 3-D-grid Pallas kernel with
 the SFC schedule on the (i, j) tile plane (or by ``vmap`` over the 2-D
 kernel with ``via_vmap=True``).
+
+``use_prefetch`` defaults to ``True`` across the whole stack (kernels,
+wrappers, engine): the scalar-prefetch schedule table works on any grid
+and amortises index cost to zero.  ``False`` (the paper-faithful
+in-``index_map`` decode) is an explicit opt-in everywhere.
 """
 from __future__ import annotations
 
@@ -23,7 +37,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .ref import matmul_batched_ref, matmul_ref
+from .ref import matmul_batched_fused_ref, matmul_fused_ref
 from .sfc_matmul import sfc_matmul_batched_pallas, sfc_matmul_pallas
 
 __all__ = ["sfc_matmul", "sfc_matmul_batched", "default_backend_is_tpu"]
@@ -43,9 +57,22 @@ def _pad_to(x, mult0: int, mult1: int):
     return x
 
 
+def _pad_last(x, mult: int):
+    """Pad the last dim of ``x`` up to a ``mult`` multiple (bias vectors)."""
+    p = (-x.shape[-1]) % mult
+    if p:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, p)])
+    return x
+
+
 def _resolve_auto(m: int, n: int, k: int, dtype, batched: bool = False,
-                  objective: str = "time"):
+                  objective: str = "time", has_bias: bool = False,
+                  activation: str = "none", has_residual: bool = False):
     """Map schedule="auto" to a concrete (schedule, blocks, prefetch, g).
+
+    The epilogue shape (bias / activation / residual presence) keys the
+    tuner: a fused epilogue removes whole HBM passes from the traffic
+    model, which moves the block-size optimum (DESIGN.md §9).
 
     The winner's DVFS dimension (``TuneConfig.f_scale``) is stripped
     here: it parameterises the tuner's scoring and the launch layer's
@@ -54,16 +81,21 @@ def _resolve_auto(m: int, n: int, k: int, dtype, batched: bool = False,
 
     Imported lazily: the tuner depends on this module for measurement."""
     from repro.tune import resolve_config
+    from repro.tune.cost import EpilogueSpec
 
+    ep = EpilogueSpec(bias=has_bias, activation=activation,
+                      residual=has_residual)
     cfg = resolve_config(int(m), int(n), int(k), jnp.dtype(dtype).name,
-                         batched=batched, objective=objective)
+                         batched=batched, objective=objective,
+                         epilogue=None if ep.is_noop else ep)
     return cfg.schedule, cfg.bm, cfg.bn, cfg.bk, cfg.use_prefetch, cfg.g
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("schedule", "bm", "bn", "bk", "out_dtype",
-                     "use_prefetch", "interpret", "force_pallas", "g"),
+                     "use_prefetch", "interpret", "force_pallas", "g",
+                     "activation"),
 )
 def _sfc_matmul(
     a,
@@ -78,22 +110,30 @@ def _sfc_matmul(
     interpret: bool | None,
     force_pallas: bool,
     g: int,
+    bias=None,
+    activation: str = "none",
+    residual=None,
 ):
     out_dtype = out_dtype or a.dtype
-    if schedule == "xla":
-        return matmul_ref(a, b, out_dtype)
-    if not force_pallas and not default_backend_is_tpu() and not interpret:
+    if schedule == "xla" or (
+            not force_pallas and not default_backend_is_tpu()
+            and not interpret):
         # CPU/GPU fallback for real execution paths; kernels are still
-        # exercised on CPU via interpret=True in tests/benchmarks.
-        return matmul_ref(a, b, out_dtype)
+        # exercised on CPU via interpret=True in tests/benchmarks.  The
+        # fused math is reproduced exactly (f32 epilogue, single cast).
+        return matmul_fused_ref(a, b, bias=bias, activation=activation,
+                                residual=residual, out_dtype=out_dtype)
 
     m, n = a.shape[0], b.shape[1]
     ap = _pad_to(a, bm, bk)
     bp = _pad_to(b, bk, bn)
+    biasp = _pad_last(bias, bn) if bias is not None else None
+    resp = _pad_to(residual, bm, bn) if residual is not None else None
     out = sfc_matmul_pallas(
         ap, bp, schedule=schedule, bm=bm, bn=bn, bk=bk,
         out_dtype=out_dtype, use_prefetch=use_prefetch,
         interpret=bool(interpret), g=g,
+        bias=biasp, activation=activation, residual=resp,
     )
     return out[:m, :n]
 
@@ -112,36 +152,47 @@ def sfc_matmul(
     force_pallas: bool = False,
     g: int = 0,
     objective: str = "time",
+    bias=None,
+    activation: str = "none",
+    residual=None,
 ):
-    """C = A @ B, output tiles visited in ``schedule`` order.
+    """C = act(A @ B + bias) + residual, tiles visited in ``schedule`` order.
 
-    * pads (M, N, K) up to block multiples and crops the result;
+    * pads (M, N, K) up to block multiples and crops the result (bias and
+      residual are zero-padded alongside);
+    * ``bias`` (N,), ``activation`` in {none, relu, gelu, silu} and
+      ``residual`` (M, N) form the fused epilogue: applied to the f32
+      accumulator in the kernel's flush step, they cost zero extra HBM
+      output traffic (DESIGN.md §9);
     * ``schedule="auto"`` resolves (schedule, block sizes, prefetch)
-      through the autotuner's cache/cost model for this shape bucket,
-      adjudicated under ``objective`` ("time", "energy" or "edp" --
-      DESIGN.md §8; ignored for explicit schedules);
+      through the autotuner's cache/cost model for this (shape bucket,
+      epilogue), adjudicated under ``objective`` ("time", "energy" or
+      "edp" -- DESIGN.md §8; ignored for explicit schedules);
     * ``schedule="xla"`` or a non-TPU backend (unless ``force_pallas``)
       uses the native XLA dot -- the "tuned library" baseline (ATLAS
-      analogue in the paper's comparison);
-    * ``use_prefetch=True`` amortises curve-index computation via scalar
-      prefetch (beyond-paper; handles non-square grids), ``False`` decodes
-      in ``index_map`` (paper-faithful trade of compute for locality).
+      analogue in the paper's comparison) -- with the same epilogue math;
+    * ``use_prefetch=True`` (default) amortises curve-index computation
+      via scalar prefetch (beyond-paper; handles non-square grids),
+      ``False`` decodes in ``index_map`` (paper-faithful trade of compute
+      for locality).
     """
     if schedule == "auto":
         schedule, bm, bn, bk, use_prefetch, g = _resolve_auto(
             a.shape[0], b.shape[1], a.shape[1], a.dtype,
-            objective=objective)
+            objective=objective, has_bias=bias is not None,
+            activation=activation, has_residual=residual is not None)
     return _sfc_matmul(
         a, b, schedule=schedule, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
         use_prefetch=use_prefetch, interpret=interpret,
-        force_pallas=force_pallas, g=g)
+        force_pallas=force_pallas, g=g,
+        bias=bias, activation=activation, residual=residual)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("schedule", "bm", "bn", "bk", "out_dtype",
                      "use_prefetch", "interpret", "force_pallas",
-                     "via_vmap", "g"),
+                     "via_vmap", "g", "activation"),
 )
 def _sfc_matmul_batched(
     a,
@@ -157,32 +208,48 @@ def _sfc_matmul_batched(
     force_pallas: bool,
     via_vmap: bool,
     g: int,
+    bias=None,
+    activation: str = "none",
+    residual=None,
 ):
     out_dtype = out_dtype or a.dtype
+
+    if schedule == "xla" or (
+            not force_pallas and not default_backend_is_tpu()
+            and not interpret):
+        return matmul_batched_fused_ref(
+            a, b, bias=bias, activation=activation, residual=residual,
+            out_dtype=out_dtype)
+
+    # flatten leading dims only on the kernel path: the XLA fallback above
+    # consumes the original arrays (no dead reshapes on the fallback)
     lead = a.shape[:-2]
     m, k = a.shape[-2:]
     n = b.shape[-1]
     a3 = a.reshape((-1, m, k))
     b3 = b.reshape((-1, k, n))
-
-    if schedule == "xla" or (
-            not force_pallas and not default_backend_is_tpu()
-            and not interpret):
-        return matmul_batched_ref(a, b, out_dtype)
+    res3 = residual.reshape((-1, m, n)) if residual is not None else None
 
     ap = _pad_to(a3, bm, bk)
     bp = _pad_to(b3, bk, bn)
+    biasp = _pad_last(bias, bn) if bias is not None else None
+    resp = _pad_to(res3, bm, bn) if res3 is not None else None
     if via_vmap:
+        bias2 = biasp
         out = jax.vmap(
-            lambda x, y: sfc_matmul_pallas(
+            lambda x, y, r: sfc_matmul_pallas(
                 x, y, schedule=schedule, bm=bm, bn=bn, bk=bk,
                 out_dtype=out_dtype, use_prefetch=use_prefetch,
-                interpret=bool(interpret), g=g))(ap, bp)
+                interpret=bool(interpret), g=g,
+                bias=bias2, activation=activation, residual=r),
+            in_axes=(0, 0, 0 if resp is not None else None),
+        )(ap, bp, resp)
     else:
         out = sfc_matmul_batched_pallas(
             ap, bp, schedule=schedule, bm=bm, bn=bn, bk=bk,
             out_dtype=out_dtype, use_prefetch=use_prefetch,
-            interpret=bool(interpret), g=g)
+            interpret=bool(interpret), g=g,
+            bias=biasp, activation=activation, residual=resp)
     return out[:, :m, :n].reshape(lead + (m, n))
 
 
@@ -201,25 +268,35 @@ def sfc_matmul_batched(
     via_vmap: bool = False,
     g: int = 0,
     objective: str = "time",
+    bias=None,
+    activation: str = "none",
+    residual=None,
 ):
     """Einsum ``bij,bjk->bik`` with SFC tile traversal per batch element.
 
     ``a``: (..., M, K) and ``b``: (..., K, N) with identical leading
     dims; leading dims are flattened into one batch axis for the 3-D-grid
-    kernel and restored on return.  ``schedule="auto"`` consults the
-    autotuner (keyed on the per-element GEMM shape, adjudicated under
-    ``objective``).  ``via_vmap=True`` runs the 2-D kernel under
-    ``jax.vmap`` instead of the 3-D grid -- the two must agree (tested),
-    and vmap is the fallback for callers that are themselves inside a
-    ``vmap``.
+    kernel and restored on return.  ``bias`` (N,) is shared across batch
+    elements; ``residual`` matches the (..., M, N) output -- both fused
+    into the kernel flush (DESIGN.md §9).  ``schedule="auto"`` consults
+    the autotuner (keyed on the per-element GEMM shape + epilogue,
+    adjudicated under ``objective``).  ``via_vmap=True`` runs the 2-D
+    kernel under ``jax.vmap`` instead of the 3-D grid -- the two must
+    agree (tested), and vmap is the fallback for callers that are
+    themselves inside a ``vmap``.
     """
     assert a.shape[:-2] == b.shape[:-2], (a.shape, b.shape)
     assert a.shape[-1] == b.shape[-2], (a.shape, b.shape)
+    if residual is not None:
+        assert residual.shape == a.shape[:-1] + (b.shape[-1],), (
+            residual.shape, a.shape, b.shape)
     if schedule == "auto":
         schedule, bm, bn, bk, use_prefetch, g = _resolve_auto(
             a.shape[-2], b.shape[-1], a.shape[-1], a.dtype, batched=True,
-            objective=objective)
+            objective=objective, has_bias=bias is not None,
+            activation=activation, has_residual=residual is not None)
     return _sfc_matmul_batched(
         a, b, schedule=schedule, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
         use_prefetch=use_prefetch, interpret=interpret,
-        force_pallas=force_pallas, via_vmap=via_vmap, g=g)
+        force_pallas=force_pallas, via_vmap=via_vmap, g=g,
+        bias=bias, activation=activation, residual=residual)

@@ -1,9 +1,48 @@
-"""Pure-jnp oracles for the SFC matmul kernels."""
+"""Pure-jnp oracles for the SFC matmul kernels (+ the fused epilogue)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["matmul_ref", "matmul_batched_ref", "matmul_blocked_ref"]
+__all__ = ["matmul_ref", "matmul_batched_ref", "matmul_blocked_ref",
+           "ACTIVATIONS", "apply_activation", "apply_epilogue_ref",
+           "matmul_fused_ref", "matmul_batched_fused_ref"]
+
+# epilogue activations the fused kernels support (DESIGN.md §9)
+ACTIVATIONS = ("none", "relu", "gelu", "silu")
+
+
+def apply_activation(x, activation: str):
+    """Elementwise activation shared by the Pallas flush epilogue and the
+    XLA fallback -- one definition so fused and unfused paths cannot
+    drift (gelu is the tanh approximation in both)."""
+    if activation == "none":
+        return x
+    if activation == "relu":
+        return jnp.maximum(x, 0)
+    if activation == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if activation == "silu":
+        return jax.nn.silu(x)
+    raise ValueError(
+        f"unknown activation {activation!r}; choose from {ACTIVATIONS}")
+
+
+def apply_epilogue_ref(acc, bias=None, activation: str = "none",
+                       residual=None, out_dtype=None):
+    """out = act(acc + bias) + residual, computed in f32, then one cast.
+
+    ``acc`` is the f32 accumulator; this is the exact math the fused
+    kernels apply at the ``k == kt-1`` flush, exposed as the oracle the
+    property tests (and the XLA fallback) compare against.
+    """
+    acc = acc.astype(jnp.float32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    acc = apply_activation(acc, activation)
+    if residual is not None:
+        acc = acc + residual.astype(jnp.float32)
+    return acc.astype(out_dtype) if out_dtype is not None else acc
 
 
 def matmul_ref(a, b, out_dtype=None):
@@ -14,6 +53,17 @@ def matmul_ref(a, b, out_dtype=None):
     ).astype(out_dtype)
 
 
+def matmul_fused_ref(a, b, bias=None, activation: str = "none",
+                     residual=None, out_dtype=None):
+    """dot -> bias -> activation -> residual -> cast, f32 throughout.
+
+    The unfused composition the fused kernel must match bitwise-close,
+    and the XLA fallback executed on non-TPU backends."""
+    out_dtype = out_dtype or a.dtype
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return apply_epilogue_ref(acc, bias, activation, residual, out_dtype)
+
+
 def matmul_batched_ref(a, b, out_dtype=None):
     """f32-accumulated batched matmul (``bij,bjk->bik`` over any leading
     dims), the semantics ``sfc_matmul_batched`` must match."""
@@ -21,6 +71,15 @@ def matmul_batched_ref(a, b, out_dtype=None):
     return jnp.matmul(
         a, b, preferred_element_type=jnp.float32
     ).astype(out_dtype)
+
+
+def matmul_batched_fused_ref(a, b, bias=None, activation: str = "none",
+                             residual=None, out_dtype=None):
+    """Batched ``matmul_fused_ref``; bias (N,) broadcasts over all leading
+    dims, residual matches the (..., M, N) output shape."""
+    out_dtype = out_dtype or a.dtype
+    acc = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    return apply_epilogue_ref(acc, bias, activation, residual, out_dtype)
 
 
 def matmul_blocked_ref(a, b, bm: int, bn: int, bk: int, order, out_dtype=None):

@@ -21,8 +21,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
 from repro.launch.steps import _engine_for
-from repro.models import DotEngine, decode_step, init_decode_state, \
-    init_model
+from repro.models import DotEngine, decode_step, \
+    fused_epilogue_savings_bytes, init_decode_state, init_model
 from repro.power import EnergyMeter, EnergyReport, WorkloadHints, \
     detect_backend
 
@@ -42,11 +42,15 @@ class ServeLoop:
         # point of the decode step's projection GEMM under the objective
         self.f_scale = 1.0
         if objective:
-            from repro.tune import resolved_f_scale
-            # same dtype the engine's GEMMs resolve under (bucket match)
+            from repro.tune import EpilogueSpec, resolved_f_scale
+            # same dtype AND epilogue the engine's GEMMs resolve under
+            # (bucket match): the decode step's projection executes with
+            # a fused residual, keyed .../ep=res (DESIGN.md §9)
             self.f_scale = resolved_f_scale(slots, cfg.d_model, cfg.d_model,
                                             cfg.act_dtype,
-                                            objective=objective)
+                                            objective=objective,
+                                            epilogue=EpilogueSpec(
+                                                residual=True))
         self.temperature = temperature
         self.eos_id = eos_id
         self.rng = np.random.default_rng(seed)
@@ -59,10 +63,15 @@ class ServeLoop:
         # energy telemetry: one reading per decode step, J split evenly
         # across the slots that were active in it (per-request accounting)
         self.power = power_backend or detect_backend()
+        # fused epilogues (DESIGN.md §9): modeled HBM bytes one decode
+        # step over the full slot pool no longer moves
+        self.ep_saved_step = fused_epilogue_savings_bytes(cfg, slots)
         self.energy = EnergyReport(backend=self.power.name,
                                    meta={"driver": "serve", "slots": slots,
                                          "objective": self.objective,
-                                         "f_scale": self.f_scale})
+                                         "f_scale": self.f_scale,
+                                         "fused_epilogue_saved_bytes_step":
+                                         self.ep_saved_step})
         self.request_joules: dict[int, float] = {}
         self._tok_flops = 2.0 * sum(
             int(p.size) for p in jax.tree.leaves(params))
@@ -194,6 +203,9 @@ def main(argv=None):
           f"{totals['joules'] / max(total_new, 1):.3f} J/token, "
           f"{totals['joules'] * totals['seconds'] / n_steps ** 2:.3e} "
           f"Js EDP/step")
+    print(f"[serve] fused epilogues (DESIGN.md §9): "
+          f"~{loop.ep_saved_step / 1e6:.2f} MB/step HBM traffic "
+          f"eliminated across {loop.slots} slots (modeled)")
     for r, toks in sorted(out.items()):
         print(f"  req {r}: {toks[:args.prompt_len]} -> "
               f"{toks[args.prompt_len:][:8]}... "

@@ -18,9 +18,10 @@ import jax
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, load_checkpoint
 from repro.configs import get_config, get_smoke_config
+from repro.core.energy import TPU_V5E
 from repro.data import PackedSyntheticData, PrefetchLoader
 from repro.launch.steps import build_train_step
-from repro.models import init_model
+from repro.models import fused_epilogue_savings_bytes, init_model
 from repro.models.config import ShapeSpec
 from repro.optim import AdamWConfig
 from repro.optim.adamw import init_opt_state
@@ -131,23 +132,31 @@ def main(argv=None):
     power = detect_backend(args.power_backend)
     n_params = sum(int(p.size) for p in jax.tree.leaves(params))
     step_flops = 6.0 * n_params * args.batch * args.seq
+    # fused epilogues (DESIGN.md §9): HBM passes the forward no longer
+    # makes -- stamped into the report + summary so J/step is attributable
+    ep_saved = fused_epilogue_savings_bytes(cfg, args.batch * args.seq)
     # DVFS hint: the tuned operating point of the model's dominant
     # projection GEMM (B*S x d_model x d_model) under the objective --
     # the meter accounts energy at the frequency the tuner selected,
     # not blindly at nominal
     f_scale = 1.0
     if args.objective:
-        from repro.tune import resolved_f_scale
-        # same dtype the engine's GEMMs resolve under, so the hint reads
-        # the winner the tuner actually selected, not a sibling bucket
+        from repro.tune import EpilogueSpec, resolved_f_scale
+        # same dtype AND epilogue the engine's GEMMs resolve under, so
+        # the hint reads the winner the tuner actually selected, not a
+        # sibling bucket: the dominant projection (attention out-proj /
+        # MLP down-proj) executes with a fused residual (DESIGN.md §9),
+        # so its winner lives under the .../ep=res keyspace
         f_scale = resolved_f_scale(args.batch * args.seq, cfg.d_model,
                                    cfg.d_model, cfg.act_dtype,
-                                   objective=args.objective)
+                                   objective=args.objective,
+                                   epilogue=EpilogueSpec(residual=True))
     step_hints = WorkloadHints(flops=step_flops, f_scale=f_scale)
     energy = EnergyReport(backend=power.name, meta={
         "driver": "train", "arch": args.arch, "steps": args.steps,
         "batch": args.batch, "seq": args.seq, "params": n_params,
-        "objective": args.objective or "time", "f_scale": f_scale})
+        "objective": args.objective or "time", "f_scale": f_scale,
+        "fused_epilogue_saved_bytes_fwd": ep_saved})
 
     def one_step(state, step):
         _, batch = next(loader_iter)
@@ -203,6 +212,9 @@ def main(argv=None):
           f"{totals['joules'] * totals['seconds'] / n_steps ** 2:.3e} "
           f"Js EDP/step, "
           f"{totals['joules'] / max(totals['seconds'], 1e-9):.1f} W avg")
+    print(f"[train] fused epilogues (DESIGN.md §9): "
+          f"~{ep_saved / 1e6:.1f} MB/fwd HBM traffic eliminated "
+          f"(~{ep_saved * TPU_V5E.e_hbm:.3f} J/fwd at modeled e_hbm)")
     if args.energy_report:
         energy.write(args.energy_report)
         print(f"[train] wrote energy report to {args.energy_report}")

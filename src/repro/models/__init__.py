@@ -4,6 +4,7 @@ from .layers import DotEngine  # noqa: F401
 from .transformer import (  # noqa: F401
     decode_step,
     forward,
+    fused_epilogue_savings_bytes,
     init_decode_state,
     init_model,
     loss_fn,

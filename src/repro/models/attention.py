@@ -70,11 +70,14 @@ def _sdpa(q, k, v, mask, scale):
 
 
 def attention(x, p, cfg, engine: DotEngine, cos, sin, *,
-              q_chunk: int = 1024):
+              q_chunk: int = 1024, residual=None):
     """Full-sequence attention (train / prefill).
 
     causal iff ``cfg.causal``; SWA iff ``cfg.swa_window``; encoder mode is
-    just ``causal=False``.
+    just ``causal=False``.  ``residual`` (same shape as x) is added in
+    the out-projection's fused epilogue -- the transformer block's
+    ``x + attn(...)`` without a separate elementwise HBM pass
+    (DESIGN.md §9).
     """
     from repro.distributed.ctx import constrain
 
@@ -91,7 +94,8 @@ def attention(x, p, cfg, engine: DotEngine, cos, sin, *,
     if not cfg.causal:
         out = _sdpa(q, k, v, None, scale)
         out = constrain(out, "dp", "model", None, None)
-        return engine.dot(out.reshape(b, s, -1), p["wo"])
+        return engine.dot(out.reshape(b, s, -1), p["wo"],
+                          residual=residual)
 
     c = min(q_chunk, s)
     assert s % c == 0, (s, c)
@@ -113,7 +117,7 @@ def attention(x, p, cfg, engine: DotEngine, cos, sin, *,
         outs.append(_sdpa(q_i, k_i, v_i, mask[None, None, None], scale))
     out = jnp.concatenate(outs, axis=1)
     out = constrain(out, "dp", "model", None, None)
-    return engine.dot(out.reshape(b, s, -1), p["wo"])
+    return engine.dot(out.reshape(b, s, -1), p["wo"], residual=residual)
 
 
 def prefill_kv(x, p, cfg, engine: DotEngine, cos, sin):
@@ -124,13 +128,15 @@ def prefill_kv(x, p, cfg, engine: DotEngine, cos, sin):
 
 def decode_attention(x, p, cfg, engine: DotEngine, k_cache, v_cache,
                      cache_positions, write_slot, cur_pos, cos, sin,
-                     row_mask=None):
+                     row_mask=None, residual=None):
     """One-token decode against a (possibly ring/SWA) KV cache.
 
     x: (B, 1, d); k_cache/v_cache: (B, S_cache, Hkv, dh);
     cache_positions: (S_cache,) true token position held in each slot, -1 if
     empty (a ring cache reuses slots, so slot != position);
     write_slot: scalar slot index for the new token; cur_pos: its position.
+    ``residual`` fuses the block's residual add into the out-projection
+    (DESIGN.md §9).
 
     Returns (out (B,1,d), k_cache', v_cache') with the new entry written.
     """
@@ -150,7 +156,8 @@ def decode_attention(x, p, cfg, engine: DotEngine, k_cache, v_cache,
             seq_axes=seq_axes,
             dp_axes=tuple(a for a in c.dp if a not in seq_axes),
             row_mask=row_mask)
-        out = engine.dot(out.reshape(b, 1, -1), p["wo"])
+        out = engine.dot(out.reshape(b, 1, -1), p["wo"],
+                         residual=residual)
         return out, k_cache, v_cache
 
     slots = jnp.arange(k_cache.shape[1])
@@ -165,5 +172,5 @@ def decode_attention(x, p, cfg, engine: DotEngine, k_cache, v_cache,
         valid &= pos > cur_pos - cfg.swa_window
     scale = 1.0 / math.sqrt(cfg.d_head)
     out = _sdpa(q, k_cache, v_cache, valid[None, None, None, None, :], scale)
-    out = engine.dot(out.reshape(b, 1, -1), p["wo"])
+    out = engine.dot(out.reshape(b, 1, -1), p["wo"], residual=residual)
     return out, k_cache, v_cache

@@ -47,36 +47,67 @@ class DotEngine:
     interpret: bool = False
     objective: str = "time"
 
-    def dot(self, x, w):
-        """x: (..., d_in) @ w: (d_in, d_out) -> (..., d_out)."""
+    def dot(self, x, w, *, bias=None, activation: str = "none",
+            residual=None, out_dtype=None):
+        """x: (..., d_in) @ w: (d_in, d_out) -> (..., d_out).
+
+        ``bias`` (d_out,), ``activation`` and ``residual`` (same shape
+        as the output) form the fused epilogue (DESIGN.md §9): on the
+        Pallas path they ride the kernel's accumulator flush -- no
+        post-matmul HBM round trips; on the XLA path the identical math
+        runs as (library-fusable) elementwise ops.  ``out_dtype`` folds
+        a dtype cast into the same single write (the vocab head's
+        f32-logits cast)."""
         if self.schedule == "xla":
-            return jnp.einsum("...d,df->...f", x, w)
+            if bias is None and activation == "none" and residual is None:
+                out = jnp.einsum("...d,df->...f", x, w)
+                return out.astype(out_dtype) if out_dtype else out
+            # epilogue present: accumulate in f32 like every other path
+            # (matmul_fused_ref / the Pallas flush), so "identical math"
+            # holds at bf16 too -- epilogue on the raw f32 product
+            from repro.kernels.ref import apply_epilogue_ref
+            acc = jnp.einsum("...d,df->...f", x, w,
+                             preferred_element_type=jnp.float32)
+            return apply_epilogue_ref(acc, bias, activation, residual,
+                                      out_dtype or jnp.result_type(x, w))
         from repro.kernels.ops import sfc_matmul
 
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
+        res2 = residual.reshape(-1, w.shape[-1]) \
+            if residual is not None else None
         bm, bn, bk = self.block
         out = sfc_matmul(
             x2, w, schedule=self.schedule, bm=bm, bn=bn, bk=bk,
             use_prefetch=self.use_prefetch, interpret=self.interpret,
-            objective=self.objective,
+            objective=self.objective, out_dtype=out_dtype,
+            bias=bias, activation=activation, residual=res2,
         )
         return out.reshape(*lead, w.shape[-1])
 
-    def dot_batched(self, x, w):
+    def dot_batched(self, x, w, *, bias=None, activation: str = "none",
+                    residual=None, out_dtype=None):
         """Per-batch-element GEMM: x (..., B, M, K) @ w (..., B, K, N).
 
         Routed through the 3-D-grid batched SFC kernel (or XLA matmul)
-        under the same schedule policy as :meth:`dot`."""
+        under the same schedule policy -- and the same fused epilogue --
+        as :meth:`dot`."""
         if self.schedule == "xla":
-            return jnp.matmul(x, w)
+            if bias is None and activation == "none" and residual is None:
+                out = jnp.matmul(x, w)
+                return out.astype(out_dtype) if out_dtype else out
+            from repro.kernels.ref import matmul_batched_fused_ref
+            return matmul_batched_fused_ref(
+                x, w, bias=bias, activation=activation, residual=residual,
+                out_dtype=out_dtype or jnp.result_type(x, w))
         from repro.kernels.ops import sfc_matmul_batched
 
         bm, bn, bk = self.block
         return sfc_matmul_batched(
             x, w, schedule=self.schedule, bm=bm, bn=bn, bk=bk,
             use_prefetch=self.use_prefetch, interpret=self.interpret,
-            objective=self.objective,
+            objective=self.objective, out_dtype=out_dtype,
+            bias=bias, activation=activation, residual=residual,
         )
 
 
@@ -128,11 +159,16 @@ def apply_rope(x, cos, sin):
     return jnp.concatenate([xr1, xr2], axis=-1).astype(x.dtype)
 
 
-def swiglu_mlp(x, params, engine: DotEngine):
-    """SwiGLU: w2(silu(w1 x) * w3 x). params: {w1, w3, w2}."""
-    g = engine.dot(x, params["w1"])
+def swiglu_mlp(x, params, engine: DotEngine, residual=None):
+    """SwiGLU: w2(silu(w1 x) * w3 x). params: {w1, w3, w2}.
+
+    The silu rides the up-projection's fused epilogue (applied to the
+    f32 accumulator in-kernel on the Pallas path) and ``residual`` rides
+    the down-projection's -- the layer's post-matmul elementwise HBM
+    passes collapse into the GEMM flushes (DESIGN.md §9)."""
+    g = engine.dot(x, params["w1"], activation="silu")
     u = engine.dot(x, params["w3"])
-    return engine.dot(jax.nn.silu(g) * u, params["w2"])
+    return engine.dot(g * u, params["w2"], residual=residual)
 
 
 def init_swiglu(key, d: int, d_ff: int, dtype=jnp.float32):

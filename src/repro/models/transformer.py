@@ -19,7 +19,36 @@ from .layers import DotEngine, init_linear, init_rms, init_swiglu, rms_norm, \
     rope, swiglu_mlp
 
 __all__ = ["init_model", "forward", "loss_fn", "init_decode_state",
-           "decode_step"]
+           "decode_step", "fused_epilogue_savings_bytes"]
+
+
+def fused_epilogue_savings_bytes(cfg: ArchConfig, tokens: int) -> float:
+    """Modeled HBM bytes one *forward pass* no longer moves because the
+    epilogues are fused (DESIGN.md §9).
+
+    Each fused site eliminates one full C round trip (re-read + re-write
+    of the projection output) that the dot-then-elementwise composition
+    paid: the MLP up-projection's activation (2*T*d_ff), the MLP
+    down-projection's residual add (2*T*d), the attention out-
+    projection's residual add (2*T*d), and the vocab head's dtype cast
+    (2*T*V_padded in the activation dtype; the f32 logits write itself
+    is unchanged).  Launch-layer summaries report this so a J/step or
+    ms/step reading can be attributed (train.py / serve.py).
+    """
+    act_bytes = jnp.dtype(cfg.act_jdtype()).itemsize
+    per_tok = 0.0
+    if cfg.family in ("dense", "encoder", "vlm"):
+        per_tok += 2.0 * cfg.d_model          # attn out-proj residual
+        per_tok += 2.0 * cfg.d_ff             # MLP up-proj activation
+        per_tok += 2.0 * cfg.d_model          # MLP down-proj residual
+    elif cfg.family == "moe":
+        per_tok += 2.0 * cfg.d_model          # attn out-proj residual
+    elif cfg.family == "hybrid":
+        per_tok += 2.0 * cfg.d_ff + 2.0 * cfg.d_model   # MLP sites only
+    saved = cfg.n_layers * per_tok * tokens * act_bytes
+    if cfg.vocab:
+        saved += 2.0 * tokens * cfg.padded_vocab * act_bytes  # head cast
+    return saved
 
 
 # --------------------------------------------------------------- init ------
@@ -80,15 +109,18 @@ def _layer_fwd(x, lp, cfg: ArchConfig, engine: DotEngine, cos, sin, mesh):
         mesh = c.mesh
     x = dctx.constrain(x, "dp", None, None)
     aux = jnp.zeros((), jnp.float32)
+    # residual adds ride the out-projection / down-projection GEMMs'
+    # fused epilogues instead of separate elementwise passes (DESIGN.md §9)
     if cfg.family in ("dense", "encoder", "vlm"):
-        x = x + attn_mod.attention(rms_norm(x, lp["norm1"]), lp["attn"], cfg,
-                                   engine, cos, sin,
-                                   q_chunk=cfg.attn_q_chunk)
-        x = x + swiglu_mlp(rms_norm(x, lp["norm2"]), lp["mlp"], engine)
+        x = attn_mod.attention(rms_norm(x, lp["norm1"]), lp["attn"], cfg,
+                               engine, cos, sin,
+                               q_chunk=cfg.attn_q_chunk, residual=x)
+        x = swiglu_mlp(rms_norm(x, lp["norm2"]), lp["mlp"], engine,
+                       residual=x)
     elif cfg.family == "moe":
-        x = x + attn_mod.attention(rms_norm(x, lp["norm1"]), lp["attn"], cfg,
-                                   engine, cos, sin,
-                                   q_chunk=cfg.attn_q_chunk)
+        x = attn_mod.attention(rms_norm(x, lp["norm1"]), lp["attn"], cfg,
+                               engine, cos, sin,
+                               q_chunk=cfg.attn_q_chunk, residual=x)
         y, aux = moe_mod.moe_ffn(
             rms_norm(x, lp["norm2"]), lp["moe"], cfg, engine, mesh=mesh,
             data_axes=(c.dp if c is not None else ("data",)))
@@ -104,7 +136,8 @@ def _layer_fwd(x, lp, cfg: ArchConfig, engine: DotEngine, cos, sin, mesh):
                                 chunk=cfg.ssd_chunk)
         x = x + 0.5 * (rms_norm(a, lp["attn_out_norm"])
                        + rms_norm(s, lp["ssm_out_norm"]))
-        x = x + swiglu_mlp(rms_norm(x, lp["norm2"]), lp["mlp"], engine)
+        x = swiglu_mlp(rms_norm(x, lp["norm2"]), lp["mlp"], engine,
+                       residual=x)
     else:
         raise ValueError(cfg.family)
     return x, aux
@@ -158,7 +191,9 @@ def forward(params, cfg: ArchConfig, batch, engine: DotEngine | None = None,
     x, auxs = jax.lax.scan(body, x, params["layers"])
     x = rms_norm(x, params["final_norm"])
     from repro.distributed.ctx import constrain
-    logits = engine.dot(x, params["lm_head"]).astype(jnp.float32) \
+    # vocab head: the f32 cast is fused into the GEMM's single output
+    # write instead of a separate full-logits cast pass
+    logits = engine.dot(x, params["lm_head"], out_dtype=jnp.float32) \
         if cfg.vocab else x
     logits = _mask_padded_vocab(logits, cfg)
     logits = constrain(logits, "dp", None, "model")
@@ -238,19 +273,18 @@ def decode_step(params, cfg: ArchConfig, state, tokens, pos,
         lp = layer["p"]
         outs = {}
         if cfg.family in ("dense", "vlm"):
-            a, knew, vnew = attn_mod.decode_attention(
+            x, knew, vnew = attn_mod.decode_attention(
                 rms_norm(x, lp["norm1"]), lp["attn"], cfg, engine,
                 layer["k"], layer["v"], state["kv_pos"], slot, pos, cos,
-                sin, row_mask)
-            x = x + a
-            x = x + swiglu_mlp(rms_norm(x, lp["norm2"]), lp["mlp"], engine)
+                sin, row_mask, residual=x)
+            x = swiglu_mlp(rms_norm(x, lp["norm2"]), lp["mlp"], engine,
+                           residual=x)
             outs.update(k=knew, v=vnew)
         elif cfg.family == "moe":
-            a, knew, vnew = attn_mod.decode_attention(
+            x, knew, vnew = attn_mod.decode_attention(
                 rms_norm(x, lp["norm1"]), lp["attn"], cfg, engine,
                 layer["k"], layer["v"], state["kv_pos"], slot, pos, cos,
-                sin, row_mask)
-            x = x + a
+                sin, row_mask, residual=x)
             # decode T is tiny: dense all-experts combine is exact
             # (dropless) and avoids sort/scatter under SPMD
             y, _ = moe_mod.moe_ffn(
@@ -277,7 +311,8 @@ def decode_step(params, cfg: ArchConfig, state, tokens, pos,
                 row_mask=row_mask)
             x = x + 0.5 * (rms_norm(a, lp["attn_out_norm"])
                            + rms_norm(s, lp["ssm_out_norm"]))
-            x = x + swiglu_mlp(rms_norm(x, lp["norm2"]), lp["mlp"], engine)
+            x = swiglu_mlp(rms_norm(x, lp["norm2"]), lp["mlp"], engine,
+                           residual=x)
             outs.update(k=knew, v=vnew, ssm_h=ssm_new["h"],
                         ssm_conv=ssm_new["conv"])
         return x, outs
@@ -296,6 +331,6 @@ def decode_step(params, cfg: ArchConfig, state, tokens, pos,
         new_state["v"] = upd["v"]
         new_state["kv_pos"] = state["kv_pos"].at[slot].set(pos)
     x = rms_norm(x, params["final_norm"])
-    logits = engine.dot(x, params["lm_head"]).astype(jnp.float32)
+    logits = engine.dot(x, params["lm_head"], out_dtype=jnp.float32)
     logits = _mask_padded_vocab(logits, cfg)
     return logits, new_state

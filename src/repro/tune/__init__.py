@@ -15,7 +15,10 @@ from .autotune import (  # noqa: F401
 from .cache import TuneCache, cache_key, default_cache_path, shape_bucket  # noqa: F401
 from .cost import (  # noqa: F401
     CostEstimate,
+    EpilogueSpec,
     TuneConfig,
+    epilogue_extra_bytes,
+    epilogue_flops,
     predict,
     vmem_block_capacity,
     with_f_scale,

@@ -32,7 +32,8 @@ from repro.core.energy import F_SCALE_MAX, TPU_V5E, clamp_f_scale
 from repro.core.schedule import is_pow2
 
 from .cache import TuneCache, cache_key, default_cache_path
-from .cost import CostEstimate, TuneConfig, predict, with_f_scale
+from .cost import CostEstimate, EpilogueSpec, TuneConfig, predict, \
+    with_f_scale
 from .objective import OBJECTIVES, objective_value
 
 __all__ = ["TuneResult", "candidate_configs", "autotune", "resolve_config",
@@ -159,12 +160,17 @@ def measure_config(
     warmup: int = 2,
     seed: int = 0,
     batched: bool = False,
+    epilogue: EpilogueSpec | None = None,
 ) -> float:
     """Median wall seconds of one GEMM under ``cfg`` on this backend.
 
     ``batched=True`` times the 3-D-grid batched kernel (small batch of 2)
     and reports the per-element time, so bmm/ winners are adjudicated on
-    the kernel that will actually execute them."""
+    the kernel that will actually execute them.  ``epilogue`` attaches
+    the bias/activation/residual the caller will run: Pallas candidates
+    execute it fused in the flush, the ``xla`` candidate pays the real
+    dot-then-elementwise composition -- the measurement adjudicates the
+    same pipeline the model scored."""
     import jax.numpy as jnp
 
     from repro.kernels.ops import sfc_matmul, sfc_matmul_batched
@@ -173,15 +179,25 @@ def measure_config(
     kw = dict(schedule=cfg.schedule, bm=cfg.bm, bn=cfg.bn, bk=cfg.bk,
               use_prefetch=cfg.use_prefetch, interpret=interpret or None,
               g=cfg.g)
+    if epilogue is not None and not epilogue.is_noop:
+        kw["activation"] = epilogue.activation
+        if epilogue.bias:
+            kw["bias"] = jnp.asarray(rng.standard_normal((n,)), dtype=dtype)
     if batched:
         bsz = 2
         a = jnp.asarray(rng.standard_normal((bsz, m, k)), dtype=dtype)
         b = jnp.asarray(rng.standard_normal((bsz, k, n)), dtype=dtype)
+        if epilogue is not None and epilogue.residual:
+            kw["residual"] = jnp.asarray(
+                rng.standard_normal((bsz, m, n)), dtype=dtype)
         t = _timeit(lambda a, b: sfc_matmul_batched(a, b, **kw), a, b,
                     reps=reps, warmup=warmup)
         return t / bsz
     a = jnp.asarray(rng.standard_normal((m, k)), dtype=dtype)
     b = jnp.asarray(rng.standard_normal((k, n)), dtype=dtype)
+    if epilogue is not None and epilogue.residual:
+        kw["residual"] = jnp.asarray(
+            rng.standard_normal((m, n)), dtype=dtype)
     return _timeit(lambda a, b: sfc_matmul(a, b, **kw), a, b,
                    reps=reps, warmup=warmup)
 
@@ -211,6 +227,7 @@ def autotune(
     batched: bool = False,
     objective: str = "time",
     f_scales: tuple[float, ...] | None = None,
+    epilogue: EpilogueSpec | None = None,
 ) -> TuneResult:
     """Pick the best GEMM config for (M, N, K, dtype) on ``backend``.
 
@@ -219,8 +236,12 @@ def autotune(
     survivors, then the winner is persisted.  ``objective`` scores
     candidates as wall time, joules, or energy-delay product
     (:mod:`repro.tune.objective`); each objective has its own cache
-    keyspace.  ``capacity`` pins the simulated cache size in blocks
-    (tests); ``refresh`` forces a re-search.
+    keyspace.  ``epilogue`` is the fused bias/activation/residual the
+    caller attaches (DESIGN.md §9): Pallas candidates are scored on
+    fused traffic (no C round trip), the xla baseline on the unfused
+    pipeline, and the winner is cached under an epilogue-tagged key.
+    ``capacity`` pins the simulated cache size in blocks (tests);
+    ``refresh`` forces a re-search.
 
     The search space is every kernel candidate crossed with the DVFS
     grid (``f_scales``, default :func:`f_scale_candidates`; pass ``()``
@@ -247,8 +268,11 @@ def autotune(
     backend = backend or jax.default_backend()
     if cache is None:  # NB: empty TuneCache is falsy (__len__), never `or`
         cache = TuneCache()
+    if epilogue is not None and epilogue.is_noop:
+        epilogue = None
     key = cache_key(m, n, k, dtype_name, backend, batched=batched,
-                    objective=objective)
+                    objective=objective,
+                    epilogue=epilogue.tag() if epilogue else None)
 
     if not refresh:
         hit = cache.get(key)
@@ -264,7 +288,7 @@ def autotune(
         kc = c.kernel_config()
         if kc not in base:
             base[kc] = predict(kc, m, n, k, dtype_bytes, hw=hw,
-                               capacity=capacity)
+                               capacity=capacity, epilogue=epilogue)
     fs = f_scale_candidates(hw) if f_scales is None else tuple(
         clamp_f_scale(hw, f) for f in f_scales)
     ests = []
@@ -293,7 +317,8 @@ def autotune(
             t_nom = measured.get(repr(kc))
             if t_nom is None:
                 t_nom = measure_config(kc, m, n, k, dtype,
-                                       interpret=interpret, batched=batched)
+                                       interpret=interpret, batched=batched,
+                                       epilogue=epilogue)
                 measured[repr(kc)] = t_nom
             # the host runs at nominal frequency.  objective="time"
             # therefore adjudicates on the *raw* measurement: a DVFS
@@ -324,6 +349,7 @@ def autotune(
         "dtype": dtype_name,
         "backend": backend,
         "objective": objective,
+        "epilogue": epilogue.tag() if epilogue else "none",
         "measured": measured,
         "predicted_time": chosen_est.time if chosen_est else None,
         "predicted_score": (objective_value(chosen_est, objective, hw=hw)
@@ -376,6 +402,7 @@ def resolve_config(
     cache: TuneCache | None = None,
     batched: bool = False,
     objective: str = "time",
+    epilogue: EpilogueSpec | None = None,
 ) -> TuneConfig:
     """Hot-path ``schedule="auto"`` resolution: cached winner or a fresh
     (analytic + measured-on-TPU) search.  Memoised in-process, so after
@@ -383,12 +410,15 @@ def resolve_config(
     trace time (shapes are static).  ``batched`` keys the 3-D-grid
     kernel's winners separately from the 2-D kernel's (different block
     specs, different optimum); ``objective`` selects the adjudication
-    metric and keys both the memo and the on-disk cache, so time-tuned
-    winners never leak into an energy/EDP policy."""
+    metric and ``epilogue`` the fused bias/activation/residual shape --
+    both key the memo and the on-disk cache, so time-tuned or bare-GEMM
+    winners never leak into an energy/EDP or fused-epilogue policy."""
     import jax
 
     dtype_name = np.dtype(dtype).name if dtype != "bfloat16" else "bfloat16"
     bk_ = backend or jax.default_backend()
+    if epilogue is not None and epilogue.is_noop:
+        epilogue = None
     path = cache.path if cache is not None else default_cache_path()
     # keyed on the cache file's mtime: any on-disk mutation (invalidate(),
     # another process re-tuning) makes the memo entry unreachable, so a
@@ -400,11 +430,13 @@ def resolve_config(
             return 0
 
     bucket = cache_key(m, n, k, dtype_name, bk_, batched=batched,
-                       objective=objective)
+                       objective=objective,
+                       epilogue=epilogue.tag() if epilogue else None)
     cfg = _RESOLVE_MEMO.get((path, _mtime(), bucket))
     if cfg is None:
         cfg = autotune(m, n, k, dtype, backend=backend, cache=cache,
-                       batched=batched, objective=objective).config
+                       batched=batched, objective=objective,
+                       epilogue=epilogue).config
         # store under the post-search mtime (a fresh search writes the
         # file) and evict only this path's superseded entries; once all
         # buckets are persisted the mtime stops moving and every shape
@@ -428,6 +460,7 @@ def resolved_f_scale(
     cache: TuneCache | None = None,
     batched: bool = False,
     objective: str = "time",
+    epilogue: EpilogueSpec | None = None,
 ) -> float:
     """The DVFS operating point of the tuned winner for this shape.
 
@@ -438,4 +471,5 @@ def resolved_f_scale(
     shares the memo/cache and is safe to call once at startup.
     """
     return resolve_config(m, n, k, dtype, backend=backend, cache=cache,
-                          batched=batched, objective=objective).f_scale
+                          batched=batched, objective=objective,
+                          epilogue=epilogue).f_scale

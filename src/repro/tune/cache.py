@@ -36,16 +36,25 @@ def shape_bucket(m: int, n: int, k: int) -> tuple[int, int, int]:
 
 
 def cache_key(m: int, n: int, k: int, dtype: str, backend: str,
-              batched: bool = False, objective: str = "time") -> str:
+              batched: bool = False, objective: str = "time",
+              epilogue: str | None = None) -> str:
     """Winner-cache key.  Non-default objectives get their own keyspace
     (``.../obj=edp``): a winner adjudicated on wall time must never be
     served to an energy- or EDP-optimising caller; ``"time"`` keeps the
-    historical unsuffixed form so existing caches stay valid."""
+    historical unsuffixed form so existing caches stay valid.
+
+    ``epilogue`` (an :class:`repro.tune.cost.EpilogueSpec` tag such as
+    ``bias+gelu+res``) likewise gets its own keyspace: a fused epilogue
+    removes whole HBM passes from the candidate traffic, so the winner
+    for ``dot`` and the winner for ``dot+epilogue`` are different
+    searches (DESIGN.md §9).  Bare GEMMs keep the unsuffixed key."""
     bm_, bn_, bk_ = shape_bucket(m, n, k)
     tag = "bmm" if batched else "mm"
     key = f"{tag}/{bm_}x{bn_}x{bk_}/{dtype}/{backend}"
     if objective != "time":
         key += f"/obj={objective}"
+    if epilogue and epilogue != "none":
+        key += f"/ep={epilogue}"
     return key
 
 

@@ -35,7 +35,8 @@ from repro.core.energy import TPU_V5E, clamp_f_scale
 from repro.core.locality import matmul_hbm_traffic
 from repro.core.schedule import grid_schedule, schedule_extra_kwargs
 
-__all__ = ["TuneConfig", "CostEstimate", "predict", "vmem_block_capacity",
+__all__ = ["TuneConfig", "CostEstimate", "EpilogueSpec", "predict",
+           "epilogue_extra_bytes", "epilogue_flops", "vmem_block_capacity",
            "with_f_scale"]
 
 # scalar-unit rate used for index-decode overhead (matches benchmarks/common)
@@ -95,6 +96,80 @@ class TuneConfig:
         return dataclasses.replace(self, f_scale=1.0)
 
 
+# elementwise VPU ops per output element for each fused activation --
+# used only to account epilogue FLOPs in the energy estimate (time-wise
+# the epilogue rides the flush and is fully overlapped)
+_ACT_OPS = {"none": 0, "relu": 1, "silu": 4, "gelu": 8}
+
+
+@dataclass(frozen=True)
+class EpilogueSpec:
+    """The post-matmul epilogue a GEMM call carries (DESIGN.md §9).
+
+    The spec is *what math follows the dot*, independent of where it
+    runs: fused into the kernel flush (Pallas path) or as separate XLA
+    elementwise ops after the library dot.  The cost model charges the
+    two executions differently -- that asymmetry is what moves tuning
+    winners once the epilogue is free.
+    """
+
+    bias: bool = False
+    activation: str = "none"
+    residual: bool = False
+
+    @property
+    def is_noop(self) -> bool:
+        return (not self.bias and self.activation == "none"
+                and not self.residual)
+
+    def tag(self) -> str:
+        """Stable short form for cache keys, e.g. ``bias+gelu+res``."""
+        parts = []
+        if self.bias:
+            parts.append("bias")
+        if self.activation != "none":
+            parts.append(self.activation)
+        if self.residual:
+            parts.append("res")
+        return "+".join(parts) or "none"
+
+
+def epilogue_extra_bytes(ep: EpilogueSpec | None, m: int, n: int,
+                         dtype_bytes: int, fused: bool) -> float:
+    """HBM bytes the epilogue adds on top of the bare GEMM's traffic.
+
+    Fused (Pallas flush): only the *new inputs* are streamed -- the bias
+    vector (N elements, tiled (1, bn) into VMEM) and the residual array
+    (M*N, each block read exactly once thanks to consecutive-index
+    revisiting).  C is still written exactly once; there is no C re-read.
+
+    Unfused (dot-then-elementwise): XLA fuses the elementwise chain into
+    a single extra pass -- generous to the baseline -- but that pass
+    still re-reads all of C and re-writes all of C on top of the same
+    bias/residual input reads.  The fused path is therefore cheaper by
+    exactly ``2*M*N*dtype_bytes``: the eliminated C round trip.
+    """
+    if ep is None or ep.is_noop:
+        return 0.0
+    bias_bytes = n * dtype_bytes if ep.bias else 0.0
+    res_bytes = m * n * dtype_bytes if ep.residual else 0.0
+    if fused:
+        return bias_bytes + res_bytes
+    return 2.0 * m * n * dtype_bytes + bias_bytes + res_bytes
+
+
+def epilogue_flops(ep: EpilogueSpec | None, m: int, n: int) -> float:
+    """Elementwise op count of the epilogue (bias add + activation +
+    residual add), charged per output element.  Dwarfed by 2*M*N*K but
+    kept so the energy model's core term stays consistent."""
+    if ep is None or ep.is_noop:
+        return 0.0
+    ops = _ACT_OPS.get(ep.activation, 4)
+    ops += 1 if ep.bias else 0
+    ops += 1 if ep.residual else 0
+    return float(ops) * m * n
+
+
 @dataclass(frozen=True)
 class CostEstimate:
     config: TuneConfig
@@ -135,18 +210,28 @@ def predict(
     hw=TPU_V5E,
     capacity: int | None = None,
     max_sim_steps: int = 200_000,
+    epilogue: EpilogueSpec | None = None,
+    fuse_epilogue: bool = True,
 ) -> CostEstimate:
     """Model the time/traffic of ``cfg`` on an M x N x K GEMM.
 
     ``capacity`` overrides the LRU size in blocks (tests use small caches
     to reach the memory-bound regime on small grids); default is the
     VMEM-derived capacity for the candidate's block sizes.
+
+    ``epilogue`` adds the post-matmul bias/activation/residual passes to
+    the accounting (DESIGN.md §9).  Pallas candidates execute it fused
+    into the flush (``fuse_epilogue=True``: no C re-read/re-write, the
+    bias is a tiled (1, bn) input, the residual streams once); the
+    ``"xla"`` library baseline always pays the unfused dot-then-
+    elementwise pipeline -- an extra full C round trip.
     """
     bm, bn, bk = cfg.bm, cfg.bn, cfg.bk
     mt = -(-m // bm)
     nt = -(-n // bn)
     kt = -(-k // bk)
-    flops = 2.0 * m * n * k
+    ep = None if (epilogue is None or epilogue.is_noop) else epilogue
+    flops = 2.0 * m * n * k + epilogue_flops(ep, m, n)
     # DVFS: compute rate (MXU and scalar unit) scales with core clock,
     # HBM bandwidth does not (core/energy.py) -- lowering f only costs
     # time once t_compute(f) crosses t_hbm
@@ -155,11 +240,15 @@ def predict(
 
     if cfg.schedule == "xla":
         # tuned-library baseline: assume near-roofline traffic (each
-        # operand streamed once, output written once)
-        traffic = dtype_bytes * (m * k + k * n + m * n)
+        # operand streamed once, output written once) -- plus the
+        # unfused epilogue pipeline's extra passes when one is attached
+        traffic = dtype_bytes * (m * k + k * n + m * n) \
+            + epilogue_extra_bytes(ep, m, n, dtype_bytes, fused=False)
         t_hbm = traffic / hw.hbm_bw
         return CostEstimate(cfg, max(t_compute, t_hbm), traffic,
-                            t_compute, t_hbm, 0.0, flops)
+                            t_compute, t_hbm, 0.0, flops,
+                            extras={"epilogue": ep.tag() if ep else "none",
+                                    "epilogue_fused": False})
 
     if capacity is None:
         capacity = vmem_block_capacity(bm, bn, bk, dtype_bytes, hw=hw)
@@ -183,7 +272,9 @@ def predict(
     scale = t_tiles / len(probe)
     read_bytes = r["read_bytes"] * scale
     write_bytes = t_tiles * blocks["C"]
-    traffic = read_bytes + write_bytes
+    ep_bytes = epilogue_extra_bytes(ep, m, n, dtype_bytes,
+                                    fused=fuse_epilogue)
+    traffic = read_bytes + write_bytes + ep_bytes
     t_hbm = traffic / hw.hbm_bw
 
     t_index = 0.0
@@ -200,7 +291,10 @@ def predict(
         t_index,
         flops,
         extras={"misses": r["misses"] * scale, "probe_tiles": len(probe),
-                "grid": (mt, nt, kt), "capacity": capacity},
+                "grid": (mt, nt, kt), "capacity": capacity,
+                "epilogue": ep.tag() if ep else "none",
+                "epilogue_fused": bool(fuse_epilogue and ep),
+                "epilogue_bytes": ep_bytes},
     )
 
 
