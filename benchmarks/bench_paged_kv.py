@@ -1,0 +1,99 @@
+"""Paged vs contiguous decode KV cache (DESIGN.md §10).
+
+Per occupancy level (25% / 50% / 100% of the slot pool live), reports:
+
+* measured wall time of one decode step through ``ServeLoop``'s jitted
+  step in each layout (CPU runs the XLA gather fallback; TPU runs the
+  Pallas paged-attention kernel);
+* modeled HBM bytes of the attention cache traffic -- the paged gather
+  moves only allocated pages, the contiguous strip streams
+  ``slots * cache_len`` rows regardless;
+* modeled J for both through the same analytic backend the tuner uses.
+
+The modeled rows are the regression surface: paged bytes must stay
+strictly below contiguous at partial occupancy (CI asserts the 25% and
+50% rows), and converge to the strip + block-table overhead at 100%.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.energy import TPU_V5E
+from repro.models import decode_step, init_decode_state, init_model
+from repro.serve.paged_kv import init_paged_serving, occupancy_sweep
+from repro.tune.cost import AttnSpec, attn_decode_bytes
+
+from .common import pick, timeit
+
+OCCUPANCIES = (0.25, 0.5, 1.0)
+
+
+def _model_rows(slots, cache_len, page_size, hkv, dh, n_layers):
+    rows = []
+    kw = dict(slots=slots, cache_len=cache_len, n_kv_heads=hkv,
+              d_head=dh, dtype_bytes=4)
+    contig = n_layers * attn_decode_bytes(AttnSpec("contig"), **kw)
+    for lvl in occupancy_sweep(slots, cache_len, page_size,
+                               levels=OCCUPANCIES):
+        paged = n_layers * attn_decode_bytes(
+            AttnSpec("paged", page_size), lengths=lvl["lengths"], **kw)
+        # energy of the cache traffic alone, at modeled HBM pJ/byte
+        j_paged = paged * TPU_V5E.e_hbm
+        j_contig = contig * TPU_V5E.e_hbm
+        rows.append((
+            f"paged_kv/model/occ={lvl['occupancy']:g}", 0.0,
+            f"paged_MB={paged / 1e6:.4f};contig_MB={contig / 1e6:.4f};"
+            f"paged_J={j_paged:.4e};contig_J={j_contig:.4e};"
+            f"active={lvl['active_slots']};seq={lvl['seq_len']}"))
+    return rows
+
+
+def _measured_rows(slots, cache_len, page_size):
+    cfg = get_smoke_config("qwen3_1_7b")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    rows = []
+    for lvl in occupancy_sweep(slots, cache_len, page_size,
+                               levels=OCCUPANCIES):
+        active, seq = lvl["active_slots"], lvl["seq_len"]
+        mask = jnp.asarray(
+            np.arange(slots) < active)
+        toks = jnp.zeros((slots, 1), jnp.int32)
+        # decode at the last prefilled position: both layouts rewrite a
+        # covered slot/page, so the timed steps are equivalent work
+        pos = jnp.asarray(seq - 1, jnp.int32)
+        variants = {}
+        st_c = init_decode_state(cfg, slots, cache_len)
+        variants["contig"] = st_c
+        # allocator and device state built together: pool size and
+        # block-table width must agree (init_paged_serving)
+        alloc, st_p = init_paged_serving(cfg, slots, cache_len,
+                                         page_size=page_size)
+        for s in range(active):
+            alloc.ensure_range(s, seq)
+        st_p["block_tables"] = jnp.asarray(alloc.block_table)
+        variants["paged"] = st_p
+
+        @jax.jit
+        def step(p, s, t, ps_, m):
+            return decode_step(p, cfg, s, t, ps_, row_mask=m)
+
+        for name, st in variants.items():
+            t = timeit(lambda st=st: step(params, st, toks, pos, mask),
+                       reps=3, warmup=1)
+            rows.append((
+                f"paged_kv/time/occ={lvl['occupancy']:g}/{name}", t * 1e6,
+                f"slots={slots};active={active};seq={seq};"
+                f"page_size={page_size}"))
+    return rows
+
+
+def run():
+    slots, cache_len, page_size = pick((8, 256, 16), (4, 32, 8))
+    rows = _model_rows(slots, cache_len, page_size, hkv=8, dh=128,
+                       n_layers=28)
+    rows += _measured_rows(slots, cache_len, page_size)
+    return rows

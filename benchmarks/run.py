@@ -26,8 +26,9 @@ import time
 # bench payload schema: 1 = {smoke, results}; 2 adds the provenance
 # stamp (git_sha, backend, power_backend) + embedded energy report;
 # 3 adds the fused-epilogue rows (bench_fused_epilogue) and the
-# BENCH_<git_sha>.json default artifact path
-SCHEMA_VERSION = 3
+# BENCH_<git_sha>.json default artifact path; 4 adds the paged-KV rows
+# (bench_paged_kv: paged vs contiguous decode time/bytes/J per occupancy)
+SCHEMA_VERSION = 4
 
 MODULES = [
     "bench_exec_time",        # Table IV
@@ -43,6 +44,7 @@ MODULES = [
     "bench_power_backends",   # repro.power: detection, overhead, readings
     "bench_objective_crossover",  # Fig 5/6 crossover through the tuner
     "bench_fused_epilogue",   # DESIGN.md §9: fused vs unfused epilogue
+    "bench_paged_kv",         # DESIGN.md §10: paged vs contiguous decode
 ]
 
 

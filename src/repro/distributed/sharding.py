@@ -24,7 +24,8 @@ from repro.models.config import ArchConfig
 from .ctx import dp_axes
 
 __all__ = ["param_specs", "opt_state_specs", "batch_specs",
-           "decode_state_specs", "to_shardings", "zero1_spec"]
+           "decode_state_specs", "paged_decode_state_specs",
+           "to_shardings", "zero1_spec"]
 
 
 def _layer_specs(cfg: ArchConfig) -> dict:
@@ -132,6 +133,17 @@ def decode_seq_axes(cfg: ArchConfig, mesh: Mesh, global_batch: int) -> tuple:
     if _dp_if_divisible(dp_axes(mesh), global_batch, mesh):
         return ("model",)
     return tuple(mesh.axis_names)
+
+
+def paged_decode_state_specs(cfg: ArchConfig, mesh: Mesh) -> dict:
+    """Paged KV state (DESIGN.md §10): the physical page pool and block
+    tables are replicated for now -- the Morton (layer, page) interleave
+    deliberately scatters one layer's rows across the pool, so a
+    page-dim shard would turn every layer gather into a cross-shard
+    exchange.  Sharding the pool along kv-heads (the one dim every
+    gather keeps dense) is the follow-up recorded in ROADMAP.md."""
+    return {"k_pages": P(), "v_pages": P(), "page_perm": P(),
+            "block_tables": P()}
 
 
 def decode_state_specs(cfg: ArchConfig, mesh: Mesh, global_batch: int,

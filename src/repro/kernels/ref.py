@@ -1,12 +1,16 @@
-"""Pure-jnp oracles for the SFC matmul kernels (+ the fused epilogue)."""
+"""Pure-jnp oracles for the SFC matmul kernels (+ the fused epilogue)
+and the paged decode-attention kernel."""
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
 
 __all__ = ["matmul_ref", "matmul_batched_ref", "matmul_blocked_ref",
            "ACTIVATIONS", "apply_activation", "apply_epilogue_ref",
-           "matmul_fused_ref", "matmul_batched_fused_ref"]
+           "matmul_fused_ref", "matmul_batched_fused_ref",
+           "paged_decode_attention_ref"]
 
 # epilogue activations the fused kernels support (DESIGN.md §9)
 ACTIVATIONS = ("none", "relu", "gelu", "silu")
@@ -80,6 +84,38 @@ def matmul_batched_fused_ref(a, b, bias=None, activation: str = "none",
     out_dtype = out_dtype or a.dtype
     acc = jnp.matmul(a, b, preferred_element_type=jnp.float32)
     return apply_epilogue_ref(acc, bias, activation, residual, out_dtype)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, phys_tables, cur_pos):
+    """Gather-then-softmax oracle for the paged decode-attention kernel
+    (DESIGN.md §10) -- also the XLA fallback on non-TPU backends.
+
+    q: (B, H, dh); k_pages/v_pages: (R, page_size, Hkv, dh) physical
+    page pool whose *last row is the reserved zero row* (unallocated
+    block-table entries point at it); phys_tables: (B, max_pages)
+    physical row ids; cur_pos: scalar int32 newest valid position.
+
+    The math mirrors the contiguous ``_sdpa`` exactly -- f32 scores, a
+    single direct softmax over the masked span, probabilities cast back
+    to the value dtype -- so at f32 the paged and contiguous decode
+    paths are bitwise-comparable, and the Pallas kernel's online
+    rescaling agrees to ulp level.
+    """
+    b, h, dh = q.shape
+    _, page_size, hkv, _ = k_pages.shape
+    g = h // hkv
+    max_pages = phys_tables.shape[1]
+    span = max_pages * page_size
+    k = k_pages[phys_tables].reshape(b, span, hkv, dh)
+    v = v_pages[phys_tables].reshape(b, span, hkv, dh)
+    valid = jnp.arange(span) <= cur_pos
+    qg = q.reshape(b, hkv, g, dh)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32)
+    scores = scores * (1.0 / math.sqrt(dh))
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, v)
+    return out.reshape(b, h, dh)
 
 
 def matmul_blocked_ref(a, b, bm: int, bn: int, bk: int, order, out_dtype=None):

@@ -6,8 +6,15 @@ at the slot's batch row).  One decode step advances every active slot --
 the standard continuous-batching loop, runnable on CPU at smoke scale and
 lowered unchanged by the dry-run at production scale.
 
+``paged=True`` swaps the per-slot ``cache_len`` strips for the paged KV
+cache (DESIGN.md §10): physical pages of ``page_size`` tokens in Morton
+(layer, page) order, per-slot block tables, copy-free eviction on slot
+release, and admission bounded by the page pool rather than
+``cache_len``.  Greedy decode emits identical tokens in both modes
+(regression-tested).
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1_7b --smoke \
-      --requests 6 --max-new 16
+      --requests 6 --max-new 16 --paged --page-size 8
 """
 from __future__ import annotations
 
@@ -25,51 +32,106 @@ from repro.models import DotEngine, decode_step, \
     fused_epilogue_savings_bytes, init_decode_state, init_model
 from repro.power import EnergyMeter, EnergyReport, WorkloadHints, \
     detect_backend
+from repro.tune.cost import AttnSpec, attn_decode_bytes
 
 
 class ServeLoop:
     def __init__(self, cfg, params, *, slots: int = 4, cache_len: int = 128,
                  engine: DotEngine | None = None, temperature: float = 0.0,
                  eos_id: int = 1, seed: int = 0, power_backend=None,
-                 objective: str | None = None):
+                 objective: str | None = None, paged: bool = False,
+                 page_size: int = 8, num_pages: int | None = None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.cache_len = cache_len
         self.engine = _engine_for(engine, objective)
         self.objective = objective or "time"
-        # DVFS hint for per-step energy accounting: the tuned operating
-        # point of the decode step's projection GEMM under the objective
-        self.f_scale = 1.0
+        self.paged = paged
+        self.page_size = page_size
+        self.attn_spec = AttnSpec("paged", page_size) if paged \
+            else AttnSpec("contig")
+        # DVFS hints for per-step energy accounting, resolved per shape
+        # (ROADMAP "per-shape f_scale hints"): the projection GEMM
+        # (slots x d x d, fused residual), the MLP up-projection
+        # (slots x d_ff x d, fused silu) and the decode-attention step
+        # under its own attn= keyspace can all tune to different
+        # operating points; the report carries each.
+        self.f_scales = {"proj": 1.0, "mlp": 1.0, "attn": 1.0}
         if objective:
-            from repro.tune import EpilogueSpec, resolved_f_scale
+            from repro.tune import EpilogueSpec, resolved_attn_f_scale, \
+                resolved_f_scale
             # same dtype AND epilogue the engine's GEMMs resolve under
             # (bucket match): the decode step's projection executes with
-            # a fused residual, keyed .../ep=res (DESIGN.md §9)
-            self.f_scale = resolved_f_scale(slots, cfg.d_model, cfg.d_model,
-                                            cfg.act_dtype,
-                                            objective=objective,
-                                            epilogue=EpilogueSpec(
-                                                residual=True))
+            # a fused residual (.../ep=res), the MLP up-projection with a
+            # fused silu (.../ep=silu) -- DESIGN.md §9
+            self.f_scales["proj"] = resolved_f_scale(
+                slots, cfg.d_model, cfg.d_model, cfg.act_dtype,
+                objective=objective,
+                epilogue=EpilogueSpec(residual=True))
+            self.f_scales["mlp"] = resolved_f_scale(
+                slots, cfg.d_ff or cfg.d_model, cfg.d_model, cfg.act_dtype,
+                objective=objective,
+                epilogue=EpilogueSpec(activation="silu"))
+            if cfg.has_attention:
+                self.f_scales["attn"] = resolved_attn_f_scale(
+                    slots, cache_len, n_heads=cfg.n_heads,
+                    n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+                    dtype=cfg.act_dtype, attn=self.attn_spec,
+                    objective=objective)
+        # the dominant projection's point keeps the historical scalar
+        self.f_scale = self.f_scales["proj"]
         self.temperature = temperature
         self.eos_id = eos_id
         self.rng = np.random.default_rng(seed)
-        self.state = init_decode_state(cfg, slots, cache_len)
+        if paged:
+            from repro.serve.paged_kv import init_paged_serving, \
+                page_permutation
+            # one constructor for allocator + device state: pool size
+            # and block-table width must agree (DESIGN.md §10)
+            self.alloc, self.state = init_paged_serving(
+                cfg, slots, cache_len, page_size=page_size,
+                num_pages=num_pages)
+            self._perm_np = page_permutation(cfg.n_layers,
+                                             self.alloc.num_pages)
+        else:
+            self.alloc = None
+            self.state = init_decode_state(cfg, slots, cache_len)
         self.pos = np.zeros(slots, np.int32)          # next position per slot
         self.active = np.zeros(slots, bool)
         self.out: dict[int, list[int]] = {}
         self.slot_req = [-1] * slots
         self.queue: list[tuple[int, list[int]]] = []
+        # per-request generation budget survives preemption; admission
+        # order picks the preemption victim (most recently admitted)
+        self.request_emitted: dict[int, int] = {}
+        self._admit_seq = [0] * slots
+        self._admit_counter = 0
+        self.preemptions = 0
         # energy telemetry: one reading per decode step, J split evenly
         # across the slots that were active in it (per-request accounting)
         self.power = power_backend or detect_backend()
         # fused epilogues (DESIGN.md §9): modeled HBM bytes one decode
         # step over the full slot pool no longer moves
         self.ep_saved_step = fused_epilogue_savings_bytes(cfg, slots)
+        # modeled per-step HBM traffic, split attention-cache vs GEMM
+        # (weights stream once per step) -- reported next to each other
+        # so J/step is attributable to the cache layout (DESIGN.md §10)
+        self._gemm_bytes_step = float(sum(
+            p.size * np.dtype(p.dtype).itemsize
+            for p in jax.tree.leaves(params)))
+        self._cache_dtype_bytes = np.dtype(cfg.act_jdtype()).itemsize
         self.energy = EnergyReport(backend=self.power.name,
                                    meta={"driver": "serve", "slots": slots,
                                          "objective": self.objective,
+                                         "attn": self.attn_spec.tag(),
                                          "f_scale": self.f_scale,
+                                         "f_scale_per_shape":
+                                         dict(self.f_scales),
+                                         "attn_bytes_step":
+                                         self._attn_bytes_step(),
+                                         "gemm_bytes_step":
+                                         self._gemm_bytes_step,
                                          "fused_epilogue_saved_bytes_step":
                                          self.ep_saved_step})
         self.request_joules: dict[int, float] = {}
@@ -78,6 +140,59 @@ class ServeLoop:
         self._step = jax.jit(
             lambda p, s, t, pos, mask: decode_step(
                 p, cfg, s, t, pos, self.engine, row_mask=mask))
+
+    # ------------------------------------------------------ paged helpers --
+    def _attn_bytes_step(self) -> float:
+        """Modeled attention-cache bytes of one decode step, all layers
+        (paged: only *allocated* pages move -- a late-admitted slot's
+        unallocated gap span reads the shared zero row and is not
+        billed; contiguous: full strips)."""
+        if not self.cfg.has_attention:
+            return 0.0
+        lengths = None
+        if self.paged:
+            # express allocated pages as lengths so attn_decode_bytes'
+            # ceil(len/page) recovers the exact allocated page count
+            lengths = [int(n) * self.page_size
+                       for n in self.alloc.page_counts()]
+        return self.cfg.n_layers * attn_decode_bytes(
+            self.attn_spec, slots=self.slots, cache_len=self.cache_len,
+            lengths=lengths, n_kv_heads=self.cfg.n_kv_heads,
+            d_head=self.cfg.d_head, dtype_bytes=self._cache_dtype_bytes)
+
+    def _sync_tables(self):
+        self.state["block_tables"] = jnp.asarray(self.alloc.block_table)
+
+    def _scrub_pages(self, page_ids):
+        """Zero the physical rows (all layers) of newly allocated pages
+        that were previously freed -- a fresh pool is already zero, so
+        only reused pages pay the scrub; eviction itself never copies."""
+        rows = [int(r) for pid in page_ids if self.alloc.was_freed(pid)
+                for r in self._perm_np[:, pid]]
+        if rows:
+            idx = jnp.asarray(rows)
+            self.state["k_pages"] = self.state["k_pages"].at[idx].set(0)
+            self.state["v_pages"] = self.state["v_pages"].at[idx].set(0)
+
+    def _preempt_victim(self, needer: int) -> bool:
+        """Recompute-style preemption under mid-decode pool exhaustion:
+        requeue the most recently admitted *other* live slot with its
+        full context as a new prompt (its generation budget carries
+        over), release its pages, and let the needer retry.  False when
+        the needer is the only live slot (the pool is genuinely too
+        small for one sequence -- the caller's error stands)."""
+        cands = [s for s in range(self.slots)
+                 if self.active[s] and s != needer]
+        if not cands:
+            return False
+        victim = max(cands, key=lambda s: self._admit_seq[s])
+        req = self.slot_req[victim]
+        self.queue.insert(0, (req, list(self.out[req])))
+        self.active[victim] = False
+        self.alloc.release(victim)
+        self._sync_tables()
+        self.preemptions += 1
+        return True
 
     # NOTE: per-slot positions differ; the shared ``pos`` scalar in
     # decode_step is the max -- per-slot masking handles stale rows.  For
@@ -90,7 +205,28 @@ class ServeLoop:
         for slot in range(self.slots):
             if self.active[slot] or not self.queue:
                 continue
-            req_id, prompt = self.queue.pop(0)
+            req_id, prompt = self.queue[0]
+            if self.paged:
+                from repro.serve.paged_kv import pages_needed
+                need = pages_needed(len(prompt), self.page_size)
+                if need > self.alloc.num_pages:
+                    raise RuntimeError(
+                        f"prompt of {len(prompt)} tokens exceeds the "
+                        f"whole page pool ({self.alloc.num_pages} pages "
+                        f"x {self.page_size} tokens)")
+                # +1 decode-headroom page (when the pool can ever supply
+                # it): an admission that exactly fills the pool would
+                # force a preemption on its very first decode step
+                want = min(need + 1, self.alloc.num_pages)
+                if want > self.alloc.free_pages:
+                    # pool pressure: head-of-line blocks until a release
+                    # frees pages (admission is bounded by the pool, not
+                    # by any per-slot cache_len)
+                    break
+            self.queue.pop(0)
+            if self.paged:
+                self._scrub_pages(self.alloc.ensure_range(slot, len(prompt)))
+                self._sync_tables()
             # prefill the prompt token-by-token into this slot's cache row
             mask = np.zeros(self.slots, bool)
             mask[slot] = True  # slot-isolated prefill writes
@@ -104,6 +240,9 @@ class ServeLoop:
             self.active[slot] = True
             self.slot_req[slot] = req_id
             self.out[req_id] = list(prompt)
+            self.request_emitted.setdefault(req_id, 0)
+            self._admit_seq[slot] = self._admit_counter
+            self._admit_counter += 1
 
     def _sample(self, logits_row) -> int:
         if self.temperature <= 0:
@@ -114,22 +253,54 @@ class ServeLoop:
         return int(self.rng.choice(len(p), p=p))
 
     def run(self, max_new: int = 32) -> dict[int, list[int]]:
-        """Decode until queue + slots drain (or max_new per request)."""
-        emitted = {s: 0 for s in range(self.slots)}
+        """Decode until queue + slots drain (or max_new per request,
+        tracked per request so a preempted sequence resumes its budget)."""
+        from repro.serve.paged_kv import PoolExhausted
         while self.queue or self.active.any():
             self._admit()
             if not self.active.any():
                 continue
-            pos = int(self.pos.max())
+            # lockstep position over *live* slots only: a drained slot's
+            # stale high position must not poison later admissions (in
+            # paged mode it would walk fresh requests past their block
+            # tables; the contiguous ring only hid it behind pos % len)
+            pos = int(self.pos[self.active].max())
+            if self.paged:
+                # every live slot needs the page holding ``pos`` (gap
+                # pages of late-admitted slots stay unallocated: reads
+                # land on the shared zero row); pool exhaustion preempts
+                # the youngest other slot instead of killing the loop
+                # (extent overflow is deterministic -- never retried)
+                new: list[int] = []
+                for s in range(self.slots):
+                    while self.active[s]:
+                        try:
+                            new += self.alloc.ensure(s, pos)
+                            break
+                        except PoolExhausted:
+                            if not self._preempt_victim(s):
+                                raise
+                if new:    # steady-state steps re-upload nothing
+                    self._scrub_pages(new)
+                    self._sync_tables()
             toks = np.zeros((self.slots, 1), np.int32)
             for s in range(self.slots):
                 if self.active[s]:
                     toks[s, 0] = self.out[self.slot_req[s]][-1]
             n_active = int(self.active.sum())
+            attn_bytes = self._attn_bytes_step()
+            # report the peak per-step attention traffic (paged bytes
+            # grow with occupancy; contiguous is constant)
+            self.energy.meta["attn_bytes_step"] = max(
+                self.energy.meta["attn_bytes_step"], attn_bytes)
             with EnergyMeter("decode-step", backend=self.power,
                              reporter=self.energy,
                              hints=WorkloadHints(
                                  flops=self._tok_flops * n_active,
+                                 hbm_bytes=self._gemm_bytes_step
+                                 + attn_bytes,
+                                 attn_bytes=attn_bytes,
+                                 gemm_bytes=self._gemm_bytes_step,
                                  f_scale=self.f_scale)) as em:
                 logits, self.state = self._step(
                     self.params, self.state, jnp.asarray(toks),
@@ -146,12 +317,17 @@ class ServeLoop:
                 if not self.active[s]:
                     continue
                 tok = self._sample(logits[s])
-                self.out[self.slot_req[s]].append(tok)
-                emitted[s] += 1
+                r = self.slot_req[s]
+                self.out[r].append(tok)
+                self.request_emitted[r] += 1
                 self.pos[s] = pos + 1
-                if tok == self.eos_id or emitted[s] >= max_new:
+                if tok == self.eos_id or self.request_emitted[r] >= max_new:
                     self.active[s] = False
-                    emitted[s] = 0
+                    if self.paged:
+                        # copy-free eviction: the slot's pages go back
+                        # on the free list, no data moves
+                        self.alloc.release(s)
+                        self._sync_tables()
         return self.out
 
 
@@ -164,6 +340,14 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: Morton-ordered page pool + "
+                         "per-slot block tables (DESIGN.md §10)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page (with --paged)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page pool size (default: the contiguous "
+                         "cache's token footprint)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--power-backend", default=None,
@@ -185,7 +369,8 @@ def main(argv=None):
     loop = ServeLoop(cfg, params, slots=args.slots, cache_len=args.cache_len,
                      temperature=args.temperature, seed=args.seed,
                      power_backend=detect_backend(args.power_backend),
-                     objective=args.objective)
+                     objective=args.objective, paged=args.paged,
+                     page_size=args.page_size, num_pages=args.num_pages)
     rng = np.random.default_rng(args.seed)
     for r in range(args.requests):
         prompt = rng.integers(2, cfg.vocab, size=args.prompt_len).tolist()
@@ -198,11 +383,20 @@ def main(argv=None):
     print(f"[serve] {args.requests} requests, {total_new} tokens in "
           f"{dt:.2f}s ({total_new / max(dt, 1e-9):.1f} tok/s)")
     n_steps = max(len(loop.energy.readings), 1)
+    fs = loop.f_scales
     print(f"[serve] energy ({loop.power.name}, objective={loop.objective}, "
-          f"f_scale {loop.f_scale:g}): {totals['joules']:.2f} J, "
+          f"f_scale proj {fs['proj']:g} / mlp {fs['mlp']:g} / "
+          f"attn {fs['attn']:g}): {totals['joules']:.2f} J, "
           f"{totals['joules'] / max(total_new, 1):.3f} J/token, "
           f"{totals['joules'] * totals['seconds'] / n_steps ** 2:.3e} "
           f"Js EDP/step")
+    print(f"[serve] attention cache ({loop.attn_spec.tag()}): "
+          f"~{loop.energy.meta['attn_bytes_step'] / 1e6:.2f} MB/step KV "
+          f"traffic next to ~{loop.energy.meta['gemm_bytes_step'] / 1e6:.2f}"
+          f" MB/step GEMM weights (modeled)")
+    if loop.paged:
+        print(f"[serve] page pool: {loop.alloc.num_pages} pages x "
+              f"{loop.page_size} tokens, peak stats {loop.alloc.stats}")
     print(f"[serve] fused epilogues (DESIGN.md §9): "
           f"~{loop.ep_saved_step / 1e6:.2f} MB/step HBM traffic "
           f"eliminated across {loop.slots} slots (modeled)")

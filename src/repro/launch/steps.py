@@ -258,16 +258,26 @@ def make_serve_step(cfg, mesh, seq_axes, engine: DotEngine | None = None,
     return step
 
 
-def abstract_decode_state(cfg, batch: int, cache_len: int):
+def abstract_decode_state(cfg, batch: int, cache_len: int, *,
+                          paged: bool = False, page_size: int = 8):
     return jax.eval_shape(
-        lambda: init_decode_state(cfg, batch, cache_len))
+        lambda: init_decode_state(cfg, batch, cache_len, paged=paged,
+                                  page_size=page_size))
 
 
 def build_serve_step(cfg, mesh, shape_name: str, *,
                      engine: DotEngine | None = None,
                      cache_len: int | None = None,
-                     objective: str | None = None):
-    """Returns (jitted_fn, shardings, abstract_args) for one decode step."""
+                     objective: str | None = None,
+                     paged: bool = False, page_size: int = 8):
+    """Returns (jitted_fn, shardings, abstract_args) for one decode step.
+
+    ``paged=True`` builds the step over the paged KV state (DESIGN.md
+    §10): the page pool rides replicated for now
+    (``shd.paged_decode_state_specs``), so the decode lowers on any mesh
+    while the per-slot strips it replaces would have scaled memory with
+    ``cache_len`` regardless of live sequences.
+    """
     spec = SHAPES[shape_name]
     b = spec.global_batch
     cache_len = cache_len or (
@@ -278,7 +288,8 @@ def build_serve_step(cfg, mesh, shape_name: str, *,
                            objective=objective)
 
     pspec = shd.param_specs(cfg)
-    sspec = shd.decode_state_specs(cfg, mesh, b, cache_len)
+    sspec = shd.paged_decode_state_specs(cfg, mesh) if paged \
+        else shd.decode_state_specs(cfg, mesh, b, cache_len)
     p_shd = shd.to_shardings(pspec, mesh)
     s_shd = shd.to_shardings(sspec, mesh)
     rep = NamedSharding(mesh, P())
@@ -286,7 +297,8 @@ def build_serve_step(cfg, mesh, shape_name: str, *,
     t_shd = NamedSharding(mesh, P(dp, None))
     logits_shd = NamedSharding(mesh, P(dp, None, "model"))
 
-    state_abs = abstract_decode_state(cfg, b, cache_len)
+    state_abs = abstract_decode_state(cfg, b, cache_len, paged=paged,
+                                      page_size=page_size)
     tokens_abs, pos_abs = decode_inputs(cfg, spec, abstract=True)
 
     fn = jax.jit(

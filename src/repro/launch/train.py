@@ -135,27 +135,45 @@ def main(argv=None):
     # fused epilogues (DESIGN.md §9): HBM passes the forward no longer
     # makes -- stamped into the report + summary so J/step is attributable
     ep_saved = fused_epilogue_savings_bytes(cfg, args.batch * args.seq)
-    # DVFS hint: the tuned operating point of the model's dominant
-    # projection GEMM (B*S x d_model x d_model) under the objective --
-    # the meter accounts energy at the frequency the tuner selected,
-    # not blindly at nominal
+    # DVFS hints, resolved per GEMM shape (ROADMAP "per-shape f_scale"):
+    # the attention out-projection, the MLP up-projection and the vocab
+    # head tune under different buckets/epilogues and may land on
+    # different operating points -- the report carries each, the scalar
+    # hint keeps the dominant projection's point (historical behaviour)
     f_scale = 1.0
+    f_scales = {"proj": 1.0, "attn": 1.0, "mlp": 1.0, "vocab": 1.0}
     if args.objective:
         from repro.tune import EpilogueSpec, resolved_f_scale
+        tokens = args.batch * args.seq
         # same dtype AND epilogue the engine's GEMMs resolve under, so
-        # the hint reads the winner the tuner actually selected, not a
-        # sibling bucket: the dominant projection (attention out-proj /
-        # MLP down-proj) executes with a fused residual (DESIGN.md §9),
-        # so its winner lives under the .../ep=res keyspace
-        f_scale = resolved_f_scale(args.batch * args.seq, cfg.d_model,
-                                   cfg.d_model, cfg.act_dtype,
-                                   objective=args.objective,
-                                   epilogue=EpilogueSpec(residual=True))
+        # each hint reads the winner the tuner actually selected, not a
+        # sibling bucket: out-proj / down-proj carry a fused residual
+        # (.../ep=res), the MLP up-proj a fused silu (.../ep=silu) --
+        # DESIGN.md §9
+        f_scales["proj"] = resolved_f_scale(
+            tokens, cfg.d_model, cfg.d_model, cfg.act_dtype,
+            objective=args.objective, epilogue=EpilogueSpec(residual=True))
+        if cfg.has_attention and cfg.n_heads:
+            f_scales["attn"] = resolved_f_scale(
+                tokens, cfg.d_model, cfg.n_heads * cfg.d_head,
+                cfg.act_dtype, objective=args.objective,
+                epilogue=EpilogueSpec(residual=True))
+        if cfg.d_ff:
+            f_scales["mlp"] = resolved_f_scale(
+                tokens, cfg.d_ff, cfg.d_model, cfg.act_dtype,
+                objective=args.objective,
+                epilogue=EpilogueSpec(activation="silu"))
+        if cfg.vocab:
+            f_scales["vocab"] = resolved_f_scale(
+                tokens, cfg.padded_vocab, cfg.d_model, cfg.act_dtype,
+                objective=args.objective)
+        f_scale = f_scales["proj"]
     step_hints = WorkloadHints(flops=step_flops, f_scale=f_scale)
     energy = EnergyReport(backend=power.name, meta={
         "driver": "train", "arch": args.arch, "steps": args.steps,
         "batch": args.batch, "seq": args.seq, "params": n_params,
         "objective": args.objective or "time", "f_scale": f_scale,
+        "f_scale_per_shape": dict(f_scales),
         "fused_epilogue_saved_bytes_fwd": ep_saved})
 
     def one_step(state, step):
@@ -206,7 +224,9 @@ def main(argv=None):
           f"straggler events {len(monitor.events)}")
     n_steps = max(args.steps, 1)
     print(f"[train] energy ({power.name}, objective="
-          f"{args.objective or 'time'}, f_scale {f_scale:g}): "
+          f"{args.objective or 'time'}, f_scale proj {f_scales['proj']:g}"
+          f" / attn {f_scales['attn']:g} / mlp {f_scales['mlp']:g} / "
+          f"vocab {f_scales['vocab']:g}): "
           f"{totals['joules']:.1f} J total, "
           f"{totals['joules'] / n_steps:.2f} J/step, "
           f"{totals['joules'] * totals['seconds'] / n_steps ** 2:.3e} "

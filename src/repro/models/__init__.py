@@ -8,4 +8,5 @@ from .transformer import (  # noqa: F401
     init_decode_state,
     init_model,
     loss_fn,
+    prefill_kv,
 )

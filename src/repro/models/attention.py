@@ -21,7 +21,8 @@ import jax.numpy as jnp
 
 from .layers import DotEngine, apply_rope, init_linear, init_rms, rms_norm
 
-__all__ = ["init_attention", "attention", "decode_attention"]
+__all__ = ["init_attention", "attention", "decode_attention",
+           "paged_decode_attention", "prefill_kv"]
 
 
 def init_attention(key, cfg, dtype=jnp.float32):
@@ -70,14 +71,16 @@ def _sdpa(q, k, v, mask, scale):
 
 
 def attention(x, p, cfg, engine: DotEngine, cos, sin, *,
-              q_chunk: int = 1024, residual=None):
+              q_chunk: int = 1024, residual=None, return_kv: bool = False):
     """Full-sequence attention (train / prefill).
 
     causal iff ``cfg.causal``; SWA iff ``cfg.swa_window``; encoder mode is
     just ``causal=False``.  ``residual`` (same shape as x) is added in
     the out-projection's fused epilogue -- the transformer block's
     ``x + attn(...)`` without a separate elementwise HBM pass
-    (DESIGN.md §9).
+    (DESIGN.md §9).  ``return_kv=True`` additionally returns the
+    post-rope/qk-norm (k, v) -- exactly what the decode cache stores --
+    for bulk prefill into a decode state (transformer.prefill_kv).
     """
     from repro.distributed.ctx import constrain
 
@@ -94,8 +97,9 @@ def attention(x, p, cfg, engine: DotEngine, cos, sin, *,
     if not cfg.causal:
         out = _sdpa(q, k, v, None, scale)
         out = constrain(out, "dp", "model", None, None)
-        return engine.dot(out.reshape(b, s, -1), p["wo"],
-                          residual=residual)
+        out = engine.dot(out.reshape(b, s, -1), p["wo"],
+                         residual=residual)
+        return (out, k, v) if return_kv else out
 
     c = min(q_chunk, s)
     assert s % c == 0, (s, c)
@@ -117,13 +121,59 @@ def attention(x, p, cfg, engine: DotEngine, cos, sin, *,
         outs.append(_sdpa(q_i, k_i, v_i, mask[None, None, None], scale))
     out = jnp.concatenate(outs, axis=1)
     out = constrain(out, "dp", "model", None, None)
-    return engine.dot(out.reshape(b, s, -1), p["wo"], residual=residual)
+    out = engine.dot(out.reshape(b, s, -1), p["wo"], residual=residual)
+    return (out, k, v) if return_kv else out
 
 
 def prefill_kv(x, p, cfg, engine: DotEngine, cos, sin):
     """Return (k, v) for cache seeding (no attention compute)."""
     _, k, v = _project_qkv(x, p, cfg, engine, cos, sin)
     return k, v
+
+
+def paged_decode_attention(x, p, cfg, engine: DotEngine, k_pages, v_pages,
+                           phys_tables, write_tables, cur_pos, cos, sin,
+                           row_mask=None, residual=None, *,
+                           interpret: bool | None = None):
+    """One-token decode against the paged KV pool (DESIGN.md §10).
+
+    x: (B, 1, d); k_pages/v_pages: (R, page_size, Hkv, dh) physical pool
+    (last row reserved zero); phys_tables: (B, max_pages) physical rows
+    for this layer (unallocated -> zero row); write_tables: (B,
+    max_pages) the *logical* block table (-1 = unallocated), used to
+    suppress writes through unallocated entries; cur_pos: the token's
+    position.  ``row_mask``/``residual`` behave as in
+    :func:`decode_attention`.
+
+    Returns (out (B,1,d), k_pages', v_pages') with the new token's K/V
+    scattered into each slot's page at (cur_pos // page_size,
+    cur_pos % page_size).
+    """
+    from repro.kernels.paged_attention import \
+        paged_decode_attention as paged_core
+
+    b = x.shape[0]
+    page_size = k_pages.shape[1]
+    q, k_new, v_new = _project_qkv(x, p, cfg, engine, cos, sin)
+
+    page_idx = cur_pos // page_size
+    offset = cur_pos % page_size
+    rows = jnp.take(phys_tables, page_idx, axis=1)        # (B,)
+    wmask = jnp.take(write_tables, page_idx, axis=1) >= 0
+    if row_mask is not None:  # slot-isolated writes (continuous batching)
+        wmask = wmask & row_mask
+    # gather-select-scatter: masked rows write their own current value
+    # back, so duplicate zero-row indices stay deterministic
+    sel = wmask[:, None, None]
+    k_pages = k_pages.at[rows, offset].set(
+        jnp.where(sel, k_new[:, 0], k_pages[rows, offset]))
+    v_pages = v_pages.at[rows, offset].set(
+        jnp.where(sel, v_new[:, 0], v_pages[rows, offset]))
+
+    out = paged_core(q[:, 0], k_pages, v_pages, phys_tables, cur_pos,
+                     interpret=interpret)
+    out = engine.dot(out.reshape(b, 1, -1), p["wo"], residual=residual)
+    return out, k_pages, v_pages
 
 
 def decode_attention(x, p, cfg, engine: DotEngine, k_cache, v_cache,

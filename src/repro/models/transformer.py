@@ -19,7 +19,7 @@ from .layers import DotEngine, init_linear, init_rms, init_swiglu, rms_norm, \
     rope, swiglu_mlp
 
 __all__ = ["init_model", "forward", "loss_fn", "init_decode_state",
-           "decode_step", "fused_epilogue_savings_bytes"]
+           "decode_step", "prefill_kv", "fused_epilogue_savings_bytes"]
 
 
 def fused_epilogue_savings_bytes(cfg: ArchConfig, tokens: int) -> float:
@@ -232,8 +232,23 @@ def loss_fn(params, cfg: ArchConfig, batch, engine: DotEngine | None = None,
 
 # --------------------------------------------------------------- decode ----
 def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int,
-                      dtype=None):
-    """Allocate per-layer caches (stacked on layer axis for lax.scan)."""
+                      dtype=None, *, paged: bool = False,
+                      page_size: int = 8, num_pages: int | None = None,
+                      max_pages_per_slot: int | None = None):
+    """Allocate per-layer caches (stacked on layer axis for lax.scan).
+
+    ``paged=True`` returns the paged-KV state instead (DESIGN.md §10):
+    a shared physical page pool in Morton (layer, page) order plus
+    per-slot block tables; ``cache_len`` then only sizes the default
+    pool (same token footprint as the contiguous strips), it no longer
+    bounds any single sequence.
+    """
+    if paged:
+        from repro.serve.paged_kv import init_paged_decode_state
+        return init_paged_decode_state(
+            cfg, batch, page_size=page_size, num_pages=num_pages,
+            max_pages_per_slot=max_pages_per_slot, cache_len=cache_len,
+            dtype=dtype)
     dtype = dtype or cfg.act_jdtype()
     st: dict[str, Any] = {}
     if cfg.has_attention:
@@ -250,16 +265,149 @@ def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int,
     return st
 
 
+def prefill_kv(params, cfg: ArchConfig, state, tokens, slot: int = 0,
+               engine: DotEngine | None = None):
+    """Bulk-prefill one slot's KV cache from a prompt in a single forward.
+
+    ``tokens``: (L,) int32 prompt; the computed per-layer post-rope
+    (k, v) -- exactly what ``decode_step`` would have cached token by
+    token -- are written into ``state`` at positions [0, L), into the
+    slot's contiguous cache row or its paged block-table pages
+    (layout auto-detected; a paged state must have pages covering
+    [0, L) already allocated, see ``PageAllocator.ensure_range``).
+
+    Returns ``(logits (1, L, V) f32, new_state)``.  Attention-only
+    families (dense / vlm / moe); ssm and hybrid states decode-prefill
+    through ``decode_step`` instead.
+    """
+    engine = engine or DotEngine()
+    if not cfg.has_attention or cfg.has_ssm:
+        raise ValueError(
+            f"bulk prefill_kv needs a pure-attention family, got "
+            f"{cfg.family!r}")
+    toks = jnp.asarray(tokens, jnp.int32).reshape(1, -1)
+    seq = toks.shape[1]
+    x = jnp.take(params["embed"], toks, axis=0).astype(cfg.act_jdtype())
+    if cfg.rope:
+        cos, sin = rope(jnp.arange(seq), cfg.d_head, cfg.rope_theta)
+    else:
+        cos = sin = None
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm1"])
+        # q_chunk=seq: one exact-softmax chunk for any prompt length
+        x, k, v = attn_mod.attention(h, lp["attn"], cfg, engine, cos, sin,
+                                     q_chunk=seq, residual=x,
+                                     return_kv=True)
+        if cfg.family in ("dense", "vlm"):
+            x = swiglu_mlp(rms_norm(x, lp["norm2"]), lp["mlp"], engine,
+                           residual=x)
+        else:  # moe
+            y, _ = moe_mod.moe_ffn(
+                rms_norm(x, lp["norm2"]), lp["moe"], cfg, engine,
+                impl="dense")
+            x = x + y
+        return x, (k, v)
+
+    x, (k, v) = jax.lax.scan(body, x, params["layers"])
+    k, v = k[:, 0], v[:, 0]          # (L_layers, seq, hkv, dh)
+    new_state = dict(state)
+    if "k_pages" in state:
+        from repro.serve.paged_kv import pages_needed, physical_rows, \
+            zero_row_index
+        ps = state["k_pages"].shape[1]
+        npg = pages_needed(seq, ps)
+        pad = npg * ps - seq
+        bt_row = state["block_tables"][slot, :npg]           # (npg,)
+        # unallocated entries write zeros into the reserved zero row
+        # (keeping it zero) instead of corrupting a live page
+        keep = (bt_row >= 0)[None, :, None, None, None]
+        phys = physical_rows(state["page_perm"], bt_row,
+                             zero_row_index(state["k_pages"]))  # (L, npg)
+
+        def to_pages(a):
+            a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            a = a.reshape(a.shape[0], npg, ps, *a.shape[2:])
+            return jnp.where(keep, a, 0)
+
+        new_state["k_pages"] = state["k_pages"].at[phys].set(to_pages(k))
+        new_state["v_pages"] = state["v_pages"].at[phys].set(to_pages(v))
+    else:
+        assert seq <= state["k"].shape[2], (seq, state["k"].shape)
+        new_state["k"] = state["k"].at[:, slot, :seq].set(k)
+        new_state["v"] = state["v"].at[:, slot, :seq].set(v)
+        new_state["kv_pos"] = state["kv_pos"].at[:seq].set(
+            jnp.arange(seq, dtype=jnp.int32))
+    x = rms_norm(x, params["final_norm"])
+    logits = engine.dot(x, params["lm_head"], out_dtype=jnp.float32)
+    return _mask_padded_vocab(logits, cfg), new_state
+
+
+def _decode_step_paged(params, cfg: ArchConfig, state, tokens, pos,
+                       engine: DotEngine, row_mask):
+    """Paged-cache decode step (DESIGN.md §10): the physical page pool is
+    a scan *carry* (Morton interleaving means one layer's rows are not a
+    contiguous slice, so the pool cannot be scanned as per-layer xs);
+    each layer resolves its block table through its row of the Morton
+    permutation and gathers/scatters its own pages."""
+    from repro.serve.paged_kv import physical_rows, zero_row_index
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_jdtype())
+    if cfg.rope:
+        cos, sin = rope(pos[None], cfg.d_head, cfg.rope_theta)
+        cos, sin = cos[None], sin[None]
+    else:
+        cos = sin = None
+    zero_row = zero_row_index(state["k_pages"])
+    bt = state["block_tables"]
+
+    def body(carry, layer):
+        x, kp, vp = carry
+        lp = layer["p"]
+        # physical rows for this layer; unallocated entries read the
+        # reserved zero row (exact parity with never-written contiguous
+        # cache rows)
+        phys = physical_rows(layer["perm"], bt, zero_row)
+        h = rms_norm(x, lp["norm1"])
+        x, kp, vp = attn_mod.paged_decode_attention(
+            h, lp["attn"], cfg, engine, kp, vp, phys, bt, pos, cos, sin,
+            row_mask, residual=x)
+        if cfg.family in ("dense", "vlm"):
+            x = swiglu_mlp(rms_norm(x, lp["norm2"]), lp["mlp"], engine,
+                           residual=x)
+        else:  # moe (state construction rejects ssm/hybrid)
+            y, _ = moe_mod.moe_ffn(
+                rms_norm(x, lp["norm2"]), lp["moe"], cfg, engine,
+                impl="dense")
+            x = x + y
+        return (x, kp, vp), None
+
+    (x, kp, vp), _ = jax.lax.scan(
+        body, (x, state["k_pages"], state["v_pages"]),
+        {"p": params["layers"], "perm": state["page_perm"]})
+    new_state = dict(state)
+    new_state["k_pages"] = kp
+    new_state["v_pages"] = vp
+    x = rms_norm(x, params["final_norm"])
+    logits = engine.dot(x, params["lm_head"], out_dtype=jnp.float32)
+    return _mask_padded_vocab(logits, cfg), new_state
+
+
 def decode_step(params, cfg: ArchConfig, state, tokens, pos,
                 engine: DotEngine | None = None, row_mask=None):
     """One decode step.  tokens: (B, 1) int32; pos: scalar int32 position.
 
     Returns (logits (B, 1, V), new_state).  The KV cache is a ring buffer
-    when SWA bounds it (slot = pos % cache_len); dense otherwise.
+    when SWA bounds it (slot = pos % cache_len); dense otherwise.  A
+    paged state (``init_decode_state(..., paged=True)``) is auto-detected
+    and routed through the paged attention path (DESIGN.md §10).
     ``row_mask`` (B,) bool: rows with False keep their caches/states
     untouched (slot-isolated writes for continuous batching).
     """
     engine = engine or DotEngine()
+    if "k_pages" in state:
+        return _decode_step_paged(params, cfg, state, tokens, pos,
+                                  engine, row_mask)
     x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_jdtype())
     if cfg.has_attention and cfg.rope:
         cos, sin = rope(pos[None], cfg.d_head, cfg.rope_theta)

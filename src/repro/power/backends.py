@@ -54,6 +54,13 @@ class WorkloadHints:
     chips: int = 1
     f_scale: float = 1.0
     hw: HW | None = None
+    # optional breakdown of hbm_bytes for telemetry (DESIGN.md §10): the
+    # serve loop reports attention-cache traffic (paged gather vs
+    # contiguous strips) next to the GEMM weight/activation traffic, so
+    # a J/step reading can be attributed to the cache layout.  Purely
+    # informational -- the energy model consumes hbm_bytes.
+    attn_bytes: float = 0.0
+    gemm_bytes: float = 0.0
 
 
 @runtime_checkable

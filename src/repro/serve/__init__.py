@@ -1,0 +1,10 @@
+# Paged KV cache serving subsystem (DESIGN.md §10): page allocator with
+# per-slot block tables, Morton physical layout over the (layer, page)
+# grid, and the decode-state constructors the launch layer consumes.
+from .paged_kv import (  # noqa: F401
+    PageAllocator,
+    init_paged_decode_state,
+    page_permutation,
+    pages_needed,
+    zero_row_index,
+)

@@ -1,0 +1,299 @@
+"""Paged KV cache: page allocator + Morton page layout (DESIGN.md §10).
+
+The serve path's KV cache decouples *logical* sequence length from
+*physical* cache memory: each decode slot owns a block table mapping
+logical page index -> logical page id, and pages live in one shared
+physical pool.  Slot release frees pages by pushing ids back on a free
+list (copy-free eviction: no live data moves); admission is bounded by
+the pool, not by a per-slot ``cache_len`` strip.
+
+The paper's technique enters in the *physical placement*: the
+``(layer, page)`` grid is laid out along a Morton curve
+(:func:`page_permutation`), so the layer-scan's per-layer gathers of the
+same logical page list land on nearby physical rows -- the SFC locality
+effect applied to the KV pool instead of a matmul tile grid.
+
+Everything here is host-side (numpy) except :func:`init_paged_decode_state`
+(allocates the device buffers) and the small scatter helpers the models
+layer uses; the decode-attention compute lives in
+``repro.kernels.paged_attention``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import numpy as np
+
+from repro.core.schedule import grid_schedule
+
+__all__ = ["PageAllocator", "PoolExhausted", "page_permutation",
+           "init_paged_decode_state", "init_paged_serving",
+           "zero_row_index", "pages_needed", "physical_rows"]
+
+
+class PoolExhausted(RuntimeError):
+    """The free list is empty.  Distinct from the (deterministic) block
+    -table extent error so the serve loop's preemption handler retries
+    only the failures a preemption can actually cure."""
+
+
+def pages_needed(length: int, page_size: int) -> int:
+    """Pages required to hold ``length`` tokens (ceil division)."""
+    return -(-int(length) // int(page_size))
+
+
+def page_permutation(n_layers: int, num_pages: int) -> np.ndarray:
+    """Physical row of logical ``(layer, page)``: its position along the
+    Morton traversal of the (n_layers, num_pages) grid.
+
+    Consecutive physical rows follow the curve, so the decode layer-scan
+    (layer l, then l+1, over one slot's page list) revisits nearby HBM
+    regions -- same-page neighbours across layers sit a curve step apart
+    instead of a full ``num_pages`` stride (regression-tested against the
+    row-major layout in tests/test_paged_kv.py).
+    """
+    order = grid_schedule("morton", n_layers, num_pages)
+    perm = np.empty((n_layers, num_pages), np.int32)
+    perm[order[:, 0], order[:, 1]] = np.arange(len(order), dtype=np.int32)
+    return perm
+
+
+def zero_row_index(k_pages) -> int:
+    """The reserved all-zeros physical row (block-table entries of -1 map
+    here): gathers through an unallocated page read exact zeros, matching
+    the contiguous cache's never-written rows."""
+    return k_pages.shape[0] - 1
+
+
+class PageAllocator:
+    """Free-list page allocator with per-slot block tables (host-side).
+
+    Logical page ids are indices into the ``num_pages`` pool; the Morton
+    permutation to physical rows is applied at gather time (the allocator
+    never sees physical indices).  The free list is LIFO, so a released
+    slot's pages are handed to the next admission first -- maximum reuse
+    of warm rows, and the property the reuse tests pin down.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, slots: int,
+                 max_pages_per_slot: int | None = None):
+        if num_pages < 1 or page_size < 1 or slots < 1:
+            raise ValueError((num_pages, page_size, slots))
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.slots = int(slots)
+        self.max_pages_per_slot = int(max_pages_per_slot or num_pages)
+        # LIFO free list: pop() hands out the most recently freed page
+        self._free: list[int] = list(range(self.num_pages - 1, -1, -1))
+        self.block_table = np.full(
+            (self.slots, self.max_pages_per_slot), -1, np.int32)
+        self.seq_lens = np.zeros(self.slots, np.int32)
+        self._ever_freed: set[int] = set()
+        self.stats = {"allocated": 0, "freed": 0, "reused": 0}
+
+    # ------------------------------------------------------------- queries --
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def occupancy(self) -> float:
+        return self.pages_in_use / self.num_pages
+
+    def can_admit(self, prompt_len: int) -> bool:
+        return pages_needed(prompt_len, self.page_size) <= self.free_pages
+
+    def was_freed(self, pid: int) -> bool:
+        """True if ``pid`` has passed through the free list before (its
+        physical rows may hold a previous occupant's K/V and need a
+        scrub on reuse; a never-freed page is still zero from init)."""
+        return pid in self._ever_freed
+
+    def slot_pages(self, slot: int) -> list[int]:
+        row = self.block_table[slot]
+        return [int(p) for p in row if p >= 0]
+
+    def page_counts(self) -> np.ndarray:
+        """Per-slot count of *allocated* pages -- the ground truth for
+        traffic accounting (``seq_lens`` includes the zero-row gap spans
+        a late-admitted slot never allocated)."""
+        return (self.block_table >= 0).sum(axis=1)
+
+    # ----------------------------------------------------------- mutation --
+    def _check_extent(self, slot: int, page_idx: int) -> None:
+        if page_idx >= self.max_pages_per_slot:
+            raise RuntimeError(
+                f"slot {slot} outgrew its block table "
+                f"({page_idx} >= {self.max_pages_per_slot} pages); "
+                f"raise max_pages_per_slot / num_pages")
+
+    def _alloc_one(self, slot: int, page_idx: int) -> int:
+        self._check_extent(slot, page_idx)
+        if not self._free:
+            raise PoolExhausted(
+                f"KV page pool exhausted ({self.num_pages} pages of "
+                f"{self.page_size} tokens); raise num_pages or lower "
+                f"concurrency")
+        pid = self._free.pop()
+        self.block_table[slot, page_idx] = pid
+        self.stats["allocated"] += 1
+        if pid in self._ever_freed:
+            self.stats["reused"] += 1
+        return pid
+
+    def ensure(self, slot: int, position: int) -> list[int]:
+        """Allocate the page holding ``position`` for ``slot`` if absent.
+
+        Returns the list of newly allocated logical page ids (empty on a
+        hit).  Gap pages between the slot's previous extent and
+        ``position`` are *not* allocated: never-written spans read the
+        shared zero row, exactly like the contiguous cache's zero rows.
+        """
+        page_idx = int(position) // self.page_size
+        self._check_extent(slot, page_idx)
+        if self.block_table[slot, page_idx] >= 0:
+            self.seq_lens[slot] = max(self.seq_lens[slot], position + 1)
+            return []
+        pid = self._alloc_one(slot, page_idx)
+        self.seq_lens[slot] = max(self.seq_lens[slot], position + 1)
+        return [pid]
+
+    def ensure_range(self, slot: int, length: int) -> list[int]:
+        """Allocate pages covering positions [0, length) (prefill)."""
+        new: list[int] = []
+        for pg in range(pages_needed(length, self.page_size)):
+            self._check_extent(slot, pg)
+            if self.block_table[slot, pg] < 0:
+                new.append(self._alloc_one(slot, pg))
+        self.seq_lens[slot] = max(self.seq_lens[slot], length)
+        return new
+
+    def release(self, slot: int) -> list[int]:
+        """Free every page of ``slot`` (metadata only -- copy-free)."""
+        freed = self.slot_pages(slot)
+        for pid in freed:
+            self._free.append(pid)
+            self._ever_freed.add(pid)
+        self.stats["freed"] += len(freed)
+        self.block_table[slot] = -1
+        self.seq_lens[slot] = 0
+        return freed
+
+    def active_lengths(self) -> np.ndarray:
+        return self.seq_lens.copy()
+
+
+def default_pool_pages(slots: int, cache_len: int,
+                       page_size: int) -> int:
+    """Pool sized to the contiguous cache's token footprint: the paged
+    mode never uses *more* HBM than the strip allocation it replaces."""
+    return max(1, slots * pages_needed(cache_len, page_size))
+
+
+def default_slot_pages(num_pages: int, cache_len: int,
+                       page_size: int) -> int:
+    """Default block-table width: the contiguous ``cache_len``
+    equivalent plus one page of lockstep-write headroom, capped at the
+    pool.  The width bounds a slot's *logical* extent AND the per-slot
+    gather span (the XLA fallback materialises ``width * page_size``
+    tokens per slot; the kernel visits ``width`` page blocks, eliding
+    the repeated zero-row DMAs) -- a pool-wide table would make the
+    gather pool-proportional and erase the occupancy savings the
+    traffic model claims.  Callers serving longer sequences pass
+    ``max_pages_per_slot`` explicitly."""
+    return min(num_pages, pages_needed(cache_len, page_size) + 1)
+
+
+def init_paged_decode_state(cfg, slots: int, *, page_size: int = 8,
+                            num_pages: int | None = None,
+                            max_pages_per_slot: int | None = None,
+                            cache_len: int = 128,
+                            dtype=None) -> dict[str, Any]:
+    """Device buffers for the paged KV cache (DESIGN.md §10).
+
+    Layout: ``k_pages``/``v_pages`` are ``(n_layers * num_pages + 1,
+    page_size, n_kv_heads, d_head)``; row ``i`` holds the logical
+    ``(layer, page)`` whose Morton position is ``i``
+    (:func:`page_permutation`), and the final row is the reserved zero
+    row for unallocated block-table entries.  ``block_tables`` starts
+    all -1; the serve loop mirrors its host allocator into it.  The
+    allocator and this state must agree on ``num_pages`` and the table
+    width -- build both through :func:`init_paged_serving`.
+    """
+    import jax.numpy as jnp
+
+    if not cfg.has_attention or cfg.has_ssm:
+        raise ValueError(
+            f"paged KV cache needs a pure-attention family, got "
+            f"{cfg.family!r} (ssm/hybrid states are not paged)")
+    if cfg.swa_window is not None:
+        raise ValueError("paged KV cache does not implement SWA rings yet")
+    dtype = dtype or cfg.act_jdtype()
+    num_pages = num_pages or default_pool_pages(
+        slots, cache_len, page_size)
+    max_pages_per_slot = max_pages_per_slot or default_slot_pages(
+        num_pages, cache_len, page_size)
+    rows = cfg.n_layers * num_pages + 1  # +1: the shared zero row
+    k_pages = jnp.zeros(
+        (rows, page_size, cfg.n_kv_heads, cfg.d_head), dtype)
+    return {
+        "k_pages": k_pages,
+        "v_pages": jnp.zeros_like(k_pages),
+        "page_perm": jnp.asarray(
+            page_permutation(cfg.n_layers, num_pages)),
+        "block_tables": jnp.full(
+            (slots, max_pages_per_slot), -1, jnp.int32),
+    }
+
+
+def init_paged_serving(cfg, slots: int, cache_len: int, *,
+                       page_size: int = 8, num_pages: int | None = None,
+                       max_pages_per_slot: int | None = None, dtype=None):
+    """One-stop constructor: a :class:`PageAllocator` and its device
+    state, guaranteed to agree on pool size and block-table width (a
+    mismatch would let logical ids index past ``page_perm`` and
+    clamp-alias onto the last page's rows)."""
+    num_pages = num_pages or default_pool_pages(
+        slots, cache_len, page_size)
+    max_pages_per_slot = max_pages_per_slot or default_slot_pages(
+        num_pages, cache_len, page_size)
+    alloc = PageAllocator(num_pages, page_size, slots, max_pages_per_slot)
+    state = init_paged_decode_state(
+        cfg, slots, page_size=page_size, num_pages=num_pages,
+        max_pages_per_slot=max_pages_per_slot, cache_len=cache_len,
+        dtype=dtype)
+    return alloc, state
+
+
+def physical_rows(perm, block_table, zero_row: int):
+    """Map logical block-table entries to physical page rows.
+
+    ``perm``: (..., num_pages) Morton positions -- one layer's row or
+    the full (n_layers, num_pages) table; ``block_table``: (..., pages)
+    logical page ids (-1 empty).  Unallocated entries map to the
+    reserved zero row.  jnp-traceable; the single definition both the
+    decode step and the bulk prefill resolve through.
+    """
+    import jax.numpy as jnp
+
+    bt = jnp.asarray(block_table)
+    rows = jnp.take(jnp.asarray(perm), jnp.clip(bt, 0), axis=-1)
+    return jnp.where(bt >= 0, rows, zero_row)
+
+
+def occupancy_sweep(slots: int, cache_len: int, page_size: int,
+                    levels=(0.25, 0.5, 1.0)) -> list[dict]:
+    """Model rows for the paged-vs-contiguous traffic comparison at
+    several occupancy levels (benchmarks/bench_paged_kv.py)."""
+    out = []
+    for occ in levels:
+        active = max(1, int(math.ceil(slots * occ)))
+        length = max(1, int(cache_len * occ))
+        out.append({"occupancy": occ, "active_slots": active,
+                    "seq_len": length,
+                    "lengths": [length] * active + [0] * (slots - active)})
+    return out

@@ -6,20 +6,27 @@
 from .autotune import (  # noqa: F401
     TuneResult,
     autotune,
+    autotune_attn,
     candidate_configs,
     f_scale_candidates,
     measure_config,
+    resolve_attn_config,
     resolve_config,
+    resolved_attn_f_scale,
     resolved_f_scale,
 )
 from .cache import TuneCache, cache_key, default_cache_path, shape_bucket  # noqa: F401
 from .cost import (  # noqa: F401
+    AttnSpec,
     CostEstimate,
     EpilogueSpec,
     TuneConfig,
+    attn_decode_bytes,
+    attn_decode_flops,
     epilogue_extra_bytes,
     epilogue_flops,
     predict,
+    predict_attn,
     vmem_block_capacity,
     with_f_scale,
 )

@@ -32,12 +32,13 @@ from repro.core.energy import F_SCALE_MAX, TPU_V5E, clamp_f_scale
 from repro.core.schedule import is_pow2
 
 from .cache import TuneCache, cache_key, default_cache_path
-from .cost import CostEstimate, EpilogueSpec, TuneConfig, predict, \
-    with_f_scale
+from .cost import AttnSpec, CostEstimate, EpilogueSpec, TuneConfig, \
+    predict, predict_attn, with_f_scale
 from .objective import OBJECTIVES, objective_value
 
 __all__ = ["TuneResult", "candidate_configs", "autotune", "resolve_config",
-           "measure_config", "f_scale_candidates", "resolved_f_scale"]
+           "measure_config", "f_scale_candidates", "resolved_f_scale",
+           "autotune_attn", "resolve_attn_config", "resolved_attn_f_scale"]
 
 _BLOCK_CANDIDATES = (
     (128, 128, 128),
@@ -68,6 +69,22 @@ def f_scale_candidates(hw=TPU_V5E) -> tuple[float, ...]:
         if f not in out:
             out.append(f)
     return tuple(out)
+
+
+def _dtype_name(dtype) -> str:
+    """Canonical dtype string for cache keys -- one definition so the
+    GEMM and attention keyspaces can never diverge in how they name the
+    same dtype ("bfloat16" has no numpy name)."""
+    return np.dtype(dtype).name if dtype != "bfloat16" else "bfloat16"
+
+
+def _dtype_bytes(dtype) -> int:
+    try:
+        return np.dtype(dtype).itemsize
+    except TypeError:  # bfloat16 et al.
+        import jax
+
+        return jax.numpy.dtype(dtype).itemsize
 
 
 def _timeit(fn, *args, reps: int = 5, warmup: int = 2) -> float:
@@ -260,11 +277,8 @@ def autotune(
     if objective not in OBJECTIVES:
         raise ValueError(
             f"unknown objective {objective!r}; choose from {OBJECTIVES}")
-    dtype_name = np.dtype(dtype).name if dtype != "bfloat16" else "bfloat16"
-    try:
-        dtype_bytes = np.dtype(dtype).itemsize
-    except TypeError:  # bfloat16 et al.
-        dtype_bytes = jax.numpy.dtype(dtype).itemsize
+    dtype_name = _dtype_name(dtype)
+    dtype_bytes = _dtype_bytes(dtype)
     backend = backend or jax.default_backend()
     if cache is None:  # NB: empty TuneCache is falsy (__len__), never `or`
         cache = TuneCache()
@@ -371,6 +385,34 @@ def autotune(
 _RESOLVE_MEMO: dict = {}
 
 
+def _memoised_resolve(path: str, bucket: str, compute) -> TuneConfig:
+    """Shared memo discipline of the resolvers (GEMM and attention).
+
+    Keyed on the cache file's mtime: any on-disk mutation (invalidate(),
+    another process re-tuning) makes the memo entry unreachable, so a
+    stale winner is never served past an explicit cache change.  The
+    winner is stored under the post-search mtime (a fresh search writes
+    the file) and only this path's superseded entries are evicted; once
+    all buckets are persisted the mtime stops moving and every shape
+    resolves from the memo without touching the file.
+    """
+    def _mtime() -> int:
+        try:
+            return os.stat(path).st_mtime_ns
+        except OSError:
+            return 0
+
+    cfg = _RESOLVE_MEMO.get((path, _mtime(), bucket))
+    if cfg is None:
+        cfg = compute()
+        now = _mtime()
+        for mk in [mk for mk in _RESOLVE_MEMO
+                   if mk[0] == path and mk[1] != now]:
+            del _RESOLVE_MEMO[mk]
+        _RESOLVE_MEMO[(path, now, bucket)] = cfg
+    return cfg
+
+
 def _validate_for_shape(cfg: TuneConfig, m: int, n: int,
                         k: int) -> TuneConfig:
     """Re-check a (possibly cached) config against the *exact* serving
@@ -415,37 +457,19 @@ def resolve_config(
     winners never leak into an energy/EDP or fused-epilogue policy."""
     import jax
 
-    dtype_name = np.dtype(dtype).name if dtype != "bfloat16" else "bfloat16"
+    dtype_name = _dtype_name(dtype)
     bk_ = backend or jax.default_backend()
     if epilogue is not None and epilogue.is_noop:
         epilogue = None
     path = cache.path if cache is not None else default_cache_path()
-    # keyed on the cache file's mtime: any on-disk mutation (invalidate(),
-    # another process re-tuning) makes the memo entry unreachable, so a
-    # stale winner is never served past an explicit cache change
-    def _mtime() -> int:
-        try:
-            return os.stat(path).st_mtime_ns
-        except OSError:
-            return 0
-
     bucket = cache_key(m, n, k, dtype_name, bk_, batched=batched,
                        objective=objective,
                        epilogue=epilogue.tag() if epilogue else None)
-    cfg = _RESOLVE_MEMO.get((path, _mtime(), bucket))
-    if cfg is None:
-        cfg = autotune(m, n, k, dtype, backend=backend, cache=cache,
-                       batched=batched, objective=objective,
-                       epilogue=epilogue).config
-        # store under the post-search mtime (a fresh search writes the
-        # file) and evict only this path's superseded entries; once all
-        # buckets are persisted the mtime stops moving and every shape
-        # resolves from the memo without touching the file
-        now = _mtime()
-        for mk in [mk for mk in _RESOLVE_MEMO
-                   if mk[0] == path and mk[1] != now]:
-            del _RESOLVE_MEMO[mk]
-        _RESOLVE_MEMO[(path, now, bucket)] = cfg
+    cfg = _memoised_resolve(
+        path, bucket,
+        lambda: autotune(m, n, k, dtype, backend=backend, cache=cache,
+                         batched=batched, objective=objective,
+                         epilogue=epilogue).config)
     # per-call: validity depends on the exact shape, not the bucket
     return _validate_for_shape(cfg, m, n, k)
 
@@ -473,3 +497,138 @@ def resolved_f_scale(
     return resolve_config(m, n, k, dtype, backend=backend, cache=cache,
                           batched=batched, objective=objective,
                           epilogue=epilogue).f_scale
+
+
+# ------------------------------------------------------ decode attention ---
+def _attn_key(slots: int, cache_len: int, n_kv_heads: int, d_head: int,
+              dtype_name: str, backend: str, attn: AttnSpec,
+              objective: str) -> str:
+    # attention "shape" for bucketing: (slots, kv width, cache_len)
+    return cache_key(slots, n_kv_heads * d_head, cache_len, dtype_name,
+                     backend, objective=objective, attn=attn.tag())
+
+
+def autotune_attn(
+    slots: int,
+    cache_len: int,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    d_head: int,
+    dtype="float32",
+    attn: AttnSpec,
+    backend: str | None = None,
+    hw=TPU_V5E,
+    cache: TuneCache | None = None,
+    refresh: bool = False,
+    objective: str = "time",
+    f_scales: tuple[float, ...] | None = None,
+    lengths=None,
+) -> TuneResult:
+    """Tune the decode-attention step under its own cache keyspace
+    (``.../attn=paged-p8`` / ``.../attn=contig``, DESIGN.md §10).
+
+    The search space is the DVFS grid over the layout's analytic
+    roofline (:func:`repro.tune.cost.predict_attn`): a paged gather at
+    low occupancy is deeply memory-bound, so energy/EDP objectives pick
+    a lower operating point for the attention phase than for the
+    compute-bound projection GEMMs -- the per-shape ``f_scale`` split
+    the launch telemetry stamps (train.py / serve.py).  Winners persist
+    in the same on-disk cache as the GEMM searches but can never
+    collide with them (distinct key prefix).
+    """
+    import jax
+
+    if objective not in OBJECTIVES:
+        raise ValueError(
+            f"unknown objective {objective!r}; choose from {OBJECTIVES}")
+    dtype_name = _dtype_name(dtype)
+    dtype_bytes = _dtype_bytes(dtype)
+    backend = backend or jax.default_backend()
+    if cache is None:
+        cache = TuneCache()
+    key = _attn_key(slots, cache_len, n_kv_heads, d_head, dtype_name,
+                    backend, attn, objective)
+    if not refresh:
+        hit = cache.get(key)
+        if hit is not None:
+            return TuneResult(TuneConfig.from_dict(hit["config"]), key,
+                              from_cache=True)
+
+    fs = f_scale_candidates(hw) if f_scales is None else tuple(
+        clamp_f_scale(hw, f) for f in f_scales)
+    ests = [predict_attn(TuneConfig(schedule=attn.tag(), f_scale=f),
+                         attn, slots=slots, cache_len=cache_len,
+                         n_heads=n_heads, n_kv_heads=n_kv_heads,
+                         d_head=d_head, lengths=lengths,
+                         dtype_bytes=dtype_bytes, hw=hw)
+            for f in dict.fromkeys(fs)]
+    ests.sort(key=lambda e: (objective_value(e, objective, hw=hw),
+                             -e.config.f_scale))
+    chosen = ests[0]
+    entry = {
+        "config": chosen.config.to_dict(),
+        "shape": [int(slots), int(n_kv_heads * d_head), int(cache_len)],
+        "dtype": dtype_name,
+        "backend": backend,
+        "objective": objective,
+        "attn": attn.tag(),
+        "predicted_time": chosen.time,
+        "predicted_bytes": chosen.traffic_bytes,
+        "predicted_score": objective_value(chosen, objective, hw=hw),
+    }
+    cache.put(key, entry)
+    return TuneResult(chosen.config, key, from_cache=False, estimates=ests)
+
+
+def resolve_attn_config(
+    slots: int,
+    cache_len: int,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    d_head: int,
+    dtype="float32",
+    attn: AttnSpec,
+    backend: str | None = None,
+    cache: TuneCache | None = None,
+    objective: str = "time",
+) -> TuneConfig:
+    """Hot-path resolution of the decode-attention winner: the memoised
+    twin of :func:`resolve_config` over the ``attn=`` keyspace (same
+    :func:`_memoised_resolve` mtime discipline)."""
+    import jax
+
+    dtype_name = _dtype_name(dtype)
+    bk_ = backend or jax.default_backend()
+    path = cache.path if cache is not None else default_cache_path()
+    bucket = _attn_key(slots, cache_len, n_kv_heads, d_head, dtype_name,
+                       bk_, attn, objective)
+    return _memoised_resolve(
+        path, bucket,
+        lambda: autotune_attn(slots, cache_len, n_heads=n_heads,
+                              n_kv_heads=n_kv_heads, d_head=d_head,
+                              dtype=dtype, attn=attn, backend=backend,
+                              cache=cache, objective=objective).config)
+
+
+def resolved_attn_f_scale(
+    slots: int,
+    cache_len: int,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    d_head: int,
+    dtype="float32",
+    attn: AttnSpec,
+    backend: str | None = None,
+    cache: TuneCache | None = None,
+    objective: str = "time",
+) -> float:
+    """The DVFS operating point the attention phase tuned to -- stamped
+    into serve/train telemetry next to the projection GEMM's own
+    ``resolved_f_scale`` (the ROADMAP per-shape f_scale hint)."""
+    return resolve_attn_config(
+        slots, cache_len, n_heads=n_heads, n_kv_heads=n_kv_heads,
+        d_head=d_head, dtype=dtype, attn=attn, backend=backend,
+        cache=cache, objective=objective).f_scale

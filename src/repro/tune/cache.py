@@ -37,7 +37,8 @@ def shape_bucket(m: int, n: int, k: int) -> tuple[int, int, int]:
 
 def cache_key(m: int, n: int, k: int, dtype: str, backend: str,
               batched: bool = False, objective: str = "time",
-              epilogue: str | None = None) -> str:
+              epilogue: str | None = None,
+              attn: str | None = None) -> str:
     """Winner-cache key.  Non-default objectives get their own keyspace
     (``.../obj=edp``): a winner adjudicated on wall time must never be
     served to an energy- or EDP-optimising caller; ``"time"`` keeps the
@@ -47,14 +48,23 @@ def cache_key(m: int, n: int, k: int, dtype: str, backend: str,
     ``bias+gelu+res``) likewise gets its own keyspace: a fused epilogue
     removes whole HBM passes from the candidate traffic, so the winner
     for ``dot`` and the winner for ``dot+epilogue`` are different
-    searches (DESIGN.md §9).  Bare GEMMs keep the unsuffixed key."""
+    searches (DESIGN.md §9).  Bare GEMMs keep the unsuffixed key.
+
+    ``attn`` (an :class:`repro.tune.cost.AttnSpec` tag such as
+    ``paged-p8``) keys the decode-attention winners (DESIGN.md §10):
+    the kernel tag replaces the ``mm``/``bmm`` prefix with ``attn`` and
+    the shape is (slots, kv_width, cache_len) -- a paged winner and a
+    contiguous winner are different searches with different byte curves,
+    and neither may leak into the GEMM keyspace."""
     bm_, bn_, bk_ = shape_bucket(m, n, k)
-    tag = "bmm" if batched else "mm"
+    tag = "attn" if attn else ("bmm" if batched else "mm")
     key = f"{tag}/{bm_}x{bn_}x{bk_}/{dtype}/{backend}"
     if objective != "time":
         key += f"/obj={objective}"
     if epilogue and epilogue != "none":
         key += f"/ep={epilogue}"
+    if attn:
+        key += f"/attn={attn}"
     return key
 
 

@@ -35,9 +35,10 @@ from repro.core.energy import TPU_V5E, clamp_f_scale
 from repro.core.locality import matmul_hbm_traffic
 from repro.core.schedule import grid_schedule, schedule_extra_kwargs
 
-__all__ = ["TuneConfig", "CostEstimate", "EpilogueSpec", "predict",
-           "epilogue_extra_bytes", "epilogue_flops", "vmem_block_capacity",
-           "with_f_scale"]
+__all__ = ["TuneConfig", "CostEstimate", "EpilogueSpec", "AttnSpec",
+           "predict", "predict_attn", "attn_decode_bytes",
+           "attn_decode_flops", "epilogue_extra_bytes", "epilogue_flops",
+           "vmem_block_capacity", "with_f_scale"]
 
 # scalar-unit rate used for index-decode overhead (matches benchmarks/common)
 _SCALAR_OPS_PER_S = 0.94e9
@@ -168,6 +169,110 @@ def epilogue_flops(ep: EpilogueSpec | None, m: int, n: int) -> float:
     ops += 1 if ep.bias else 0
     ops += 1 if ep.residual else 0
     return float(ops) * m * n
+
+
+@dataclass(frozen=True)
+class AttnSpec:
+    """The decode-attention cache layout a serving step runs under
+    (DESIGN.md §10) -- the attention analogue of :class:`EpilogueSpec`.
+
+    ``kind="contig"`` is the per-slot strip cache (every step streams
+    ``slots * cache_len`` K/V rows whether a slot is live or not);
+    ``kind="paged"`` gathers only the pages the block tables actually
+    map.  The tag keys the tuner's cache (``.../attn=paged-p8``): a
+    winner adjudicated on strip traffic must never be served to a paged
+    caller, whose byte curve scales with occupancy instead of pool size.
+    """
+
+    kind: str = "contig"        # "contig" | "paged"
+    page_size: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("contig", "paged"):
+            raise ValueError(f"unknown attention cache kind {self.kind!r}")
+        if self.kind == "paged" and self.page_size < 1:
+            raise ValueError("paged AttnSpec needs page_size >= 1")
+
+    def tag(self) -> str:
+        """Stable cache-key form, e.g. ``contig`` / ``paged-p8``."""
+        return self.kind if self.kind == "contig" \
+            else f"paged-p{self.page_size}"
+
+
+def attn_decode_bytes(spec: AttnSpec, *, slots: int, cache_len: int,
+                      lengths=None, n_kv_heads: int, d_head: int,
+                      dtype_bytes: int = 4) -> float:
+    """Modeled HBM bytes one decode step's attention moves (K + V reads
+    plus gather metadata; the O(slots * d) q/out traffic is identical
+    across layouts and omitted so the comparison isolates the cache).
+
+    Contiguous: the batched SDPA streams every slot's whole
+    ``cache_len`` strip -- dead slots and unreached positions included,
+    because the strip is one dense array.
+
+    Paged: only the allocated pages of each sequence move -- per slot
+    ``ceil(len / page_size)`` pages of ``page_size`` tokens (the tail of
+    the last page rides along: DMA granularity is a page) -- plus the
+    block-table reads (4 bytes per entry).  At low occupancy this is
+    strictly below the strip reads; at full occupancy it approaches
+    them from above the table overhead (regression-tested).
+
+    ``lengths``: per-slot live sequence lengths (0 = slot free); default
+    assumes every slot full (worst case for the paged layout).
+    """
+    per_tok = 2.0 * n_kv_heads * d_head * dtype_bytes      # K + V
+    if spec.kind == "contig":
+        return float(slots) * cache_len * per_tok
+    ps = spec.page_size
+    if lengths is None:
+        lengths = [cache_len] * slots
+    pages = sum(-(-int(ln) // ps) for ln in lengths if ln > 0)
+    table_entries = slots * (-(-cache_len // ps))
+    return pages * ps * per_tok + 4.0 * table_entries
+
+
+def attn_decode_flops(*, slots: int, cache_len: int, lengths=None,
+                      n_heads: int, d_head: int) -> float:
+    """QK^T + PV flops of one decode step (2 GEMV sweeps per head)."""
+    if lengths is None:
+        lengths = [cache_len] * slots
+    toks = sum(int(ln) for ln in lengths)
+    return 4.0 * toks * n_heads * d_head
+
+
+def predict_attn(
+    cfg: TuneConfig,
+    spec: AttnSpec,
+    *,
+    slots: int,
+    cache_len: int,
+    n_heads: int,
+    n_kv_heads: int,
+    d_head: int,
+    lengths=None,
+    dtype_bytes: int = 4,
+    hw=TPU_V5E,
+) -> CostEstimate:
+    """Cost estimate for one paged/contiguous decode-attention step at
+    the candidate's DVFS point -- the attention analogue of
+    :func:`predict`, consumed by the tuner's ``attn=`` keyspace
+    (``repro.tune.autotune.resolve_attn_config``).  The gather is pure
+    memory traffic (no LRU replay needed: each page moves exactly once),
+    so the estimate is the roofline of the traffic model above.
+    """
+    flops = attn_decode_flops(slots=slots, cache_len=cache_len,
+                              lengths=lengths, n_heads=n_heads,
+                              d_head=d_head)
+    traffic = attn_decode_bytes(spec, slots=slots, cache_len=cache_len,
+                                lengths=lengths, n_kv_heads=n_kv_heads,
+                                d_head=d_head, dtype_bytes=dtype_bytes)
+    f = clamp_f_scale(hw, cfg.f_scale)
+    t_compute = flops / (hw.peak_flops * f)
+    t_hbm = traffic / hw.hbm_bw
+    return CostEstimate(cfg, max(t_compute, t_hbm), traffic,
+                        t_compute, t_hbm, 0.0, flops,
+                        extras={"attn": spec.tag(), "slots": slots,
+                                "cache_len": cache_len})
 
 
 @dataclass(frozen=True)

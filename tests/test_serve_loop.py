@@ -1,0 +1,220 @@
+"""ServeLoop edge-case coverage (satellite of DESIGN.md §10): EOS on the
+first generated token, slot release + immediate re-claim reusing freed
+pages, more queued requests than slots, max_new exhaustion without EOS,
+paged admission under pool pressure, and the per-shape f_scale split in
+the energy report.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import ServeLoop
+from repro.models import init_model
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_smoke_config("qwen3_1_7b")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_model(cfg, jax.random.PRNGKey(0))
+
+
+def _loop(cfg, params, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("cache_len", 64)
+    return ServeLoop(cfg, params, **kw)
+
+
+PROMPT = [5, 6, 7, 8]
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_eos_on_first_generated_token(cfg, params, paged):
+    """A request whose very first sampled token is EOS must finish with
+    exactly one emission, release its slot, and (paged) free its pages."""
+    probe = _loop(cfg, params, paged=paged, page_size=4)
+    probe.submit(0, PROMPT)
+    first = probe.run(max_new=1)[0][len(PROMPT)]
+    loop = _loop(cfg, params, paged=paged, page_size=4, eos_id=first)
+    loop.submit(0, PROMPT)
+    loop.submit(1, PROMPT)
+    out = loop.run(max_new=8)
+    for r in (0, 1):
+        assert out[r] == PROMPT + [first]      # one token, then EOS stop
+    assert not loop.active.any()
+    if paged:
+        assert loop.alloc.pages_in_use == 0
+        assert loop.alloc.free_pages == loop.alloc.num_pages
+
+
+@pytest.mark.slow
+def test_release_then_reclaim_reuses_freed_pages(cfg, params):
+    """Slot release is copy-free (free-list push) and the next admission
+    is served from the freed pages (LIFO reuse), which get scrubbed."""
+    loop = _loop(cfg, params, slots=1, paged=True, page_size=4,
+                 cache_len=128)
+    for r in range(3):
+        loop.submit(r, PROMPT)
+    out = loop.run(max_new=4)
+    assert sorted(out) == [0, 1, 2]
+    st = loop.alloc.stats
+    assert st["freed"] >= st["reused"] > 0, st
+    assert loop.alloc.pages_in_use == 0
+    # all three requests decoded the same continuation: same prompt, and
+    # reclaimed slots must not see the previous occupant's K/V (pages
+    # are scrubbed on reuse; gap positions read the shared zero row)
+    assert out[1][len(PROMPT):] == out[0][len(PROMPT):]
+    assert out[2][len(PROMPT):] == out[0][len(PROMPT):]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("paged", [False, True])
+def test_more_queued_requests_than_slots(cfg, params, paged):
+    loop = _loop(cfg, params, paged=paged, page_size=4, cache_len=256)
+    n = 5                                     # 5 requests on 2 slots
+    for r in range(n):
+        loop.submit(r, PROMPT)
+    out = loop.run(max_new=3)
+    assert sorted(out) == list(range(n))
+    for toks in out.values():
+        assert len(PROMPT) < len(toks) <= len(PROMPT) + 3
+    assert not loop.queue and not loop.active.any()
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_max_new_exhaustion_without_eos(cfg, params, paged):
+    """eos_id that can never be sampled: every request runs to the
+    max_new budget exactly and the loop still terminates."""
+    loop = _loop(cfg, params, paged=paged, page_size=4, eos_id=-1)
+    loop.submit(0, PROMPT)
+    loop.submit(1, [9, 10])
+    out = loop.run(max_new=5)
+    assert len(out[0]) == len(PROMPT) + 5
+    assert len(out[1]) == 2 + 5
+    assert not loop.active.any()
+    if paged:
+        assert loop.alloc.pages_in_use == 0
+
+
+@pytest.mark.slow
+def test_paged_admission_blocks_on_pool_pressure(cfg, params):
+    """A pool only large enough for one live request head-of-line blocks
+    the second admission until the first releases -- and both finish."""
+    # 3 pages x 4 tokens: one request needs 3 pages (8-token prompt +
+    # 4 decode positions), so the second can never be co-resident
+    prompt = list(range(2, 10))
+    loop = _loop(cfg, params, slots=2, paged=True, page_size=4,
+                 num_pages=3, eos_id=-1)
+    loop.submit(0, prompt)
+    loop.submit(1, prompt)
+    out = loop.run(max_new=4)
+    assert sorted(out) == [0, 1]
+    assert len(out[0]) == len(out[1]) == len(prompt) + 4
+    # sequential execution: the second request reused the first's pages
+    assert loop.alloc.stats["reused"] > 0
+
+
+@pytest.mark.slow
+def test_mid_decode_exhaustion_preempts_instead_of_crashing(cfg, params):
+    """Pool exhaustion *during* decode (both slots crossing a page
+    boundary with an empty free list) must preempt the youngest slot --
+    requeue with full context, budget carried over -- not kill the loop
+    with every in-flight request lost."""
+    loop = _loop(cfg, params, slots=2, paged=True, page_size=4,
+                 num_pages=4, eos_id=-1)
+    loop.submit(0, PROMPT)                    # 1 page each + headroom ok
+    loop.submit(1, PROMPT)
+    out = loop.run(max_new=6)                 # positions cross 2 pages
+    assert sorted(out) == [0, 1]
+    for r in (0, 1):                          # budget survives preemption
+        assert len(out[r]) == len(PROMPT) + 6
+    assert loop.preemptions > 0
+    assert loop.alloc.pages_in_use == 0
+
+
+@pytest.mark.slow
+def test_drained_slot_position_does_not_poison_fresh_admissions(cfg,
+                                                                params):
+    """The lockstep position is the max over *live* slots only: a
+    finished long request's stale position must not walk a freshly
+    admitted short request past its block table (or, contiguous mode,
+    silently into the ring wrap)."""
+    # table width = ceil(16/8)+1 = 3 pages = 24 tokens; the first wave
+    # ends at position 24, which would overflow a fresh slot's table if
+    # the drained slots' positions leaked into the next wave
+    loop = _loop(cfg, params, slots=2, cache_len=16, paged=True,
+                 page_size=8, num_pages=64, eos_id=-1)
+    for r in range(3):
+        loop.submit(r, PROMPT)
+    out = loop.run(max_new=20)
+    assert sorted(out) == [0, 1, 2]
+    for r in range(3):
+        assert len(out[r]) == len(PROMPT) + 20
+    assert loop.preemptions == 0              # no pool pressure involved
+
+
+def test_paged_rejects_prompt_larger_than_pool(cfg, params):
+    loop = _loop(cfg, params, paged=True, page_size=4, num_pages=2)
+    loop.submit(0, list(range(2, 14)))        # 12 tokens > 8-token pool
+    with pytest.raises(RuntimeError, match="exceeds the whole page pool"):
+        loop.run(max_new=2)
+
+
+@pytest.mark.slow
+def test_serve_identical_tokens_paged_vs_contiguous(cfg, params):
+    """Acceptance: paged and contiguous ServeLoop produce identical
+    tokens on the qwen3_1_7b smoke config (greedy, seed-fixed) for the
+    same request stream, including ragged prompts and EOS raggedness."""
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab, size=int(n)).tolist()
+               for n in (5, 3, 7, 6)]
+    outs = {}
+    for paged in (False, True):
+        loop = ServeLoop(cfg, params, slots=4, cache_len=64,
+                         paged=paged, page_size=4, seed=0)
+        for r, p in enumerate(prompts):
+            loop.submit(r, p)
+        outs[paged] = loop.run(max_new=8)
+    assert outs[True] == outs[False]
+
+
+def test_energy_report_carries_per_shape_f_scale(cfg, params, tmp_path,
+                                                 monkeypatch):
+    """Satellite fix: ServeLoop no longer stamps a single projection-GEMM
+    f_scale -- the report carries the attention-shape and MLP-shape
+    operating points separately (they may differ, see
+    test_paged_kv.test_attn_and_mlp_shapes_resolve_different_f_scale)."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tune.json"))
+    loop = _loop(cfg, params, paged=True, page_size=8,
+                 objective="energy")
+    per = loop.energy.meta["f_scale_per_shape"]
+    assert set(per) == {"proj", "mlp", "attn"}
+    assert all(0 < v <= 1.25 for v in per.values())
+    assert loop.energy.meta["f_scale"] == per["proj"] == loop.f_scale
+    assert loop.energy.meta["attn"] == "paged-p8"
+    # attention tuned under its own keyspace, not the GEMM's
+    from repro.tune.cache import TuneCache
+    keys = list(TuneCache(str(tmp_path / "tune.json")).keys())
+    assert any(k.startswith("attn/") and "attn=paged-p8" in k
+               for k in keys), keys
+
+
+def test_serve_hints_report_attn_bytes_next_to_gemm_bytes(cfg, params):
+    """The per-step EnergyMeter hints carry the modeled attention-cache
+    traffic next to the GEMM weight traffic, and the paged layout's
+    bytes stay below the contiguous strips at partial occupancy."""
+    outs = {}
+    for paged in (False, True):
+        loop = _loop(cfg, params, paged=paged, page_size=4)
+        loop.submit(0, PROMPT)                # 1 of 2 slots ever live
+        loop.run(max_new=2)
+        meta = loop.energy.meta
+        assert meta["gemm_bytes_step"] > 0
+        assert meta["attn_bytes_step"] > 0
+        outs[paged] = meta["attn_bytes_step"]
+    assert outs[True] < outs[False]           # 50% slot occupancy

@@ -22,6 +22,7 @@ def test_tiny_lm_trains_and_loss_drops():
     assert state["last_loss"] < 4.5  # ln(128) = 4.85 at init
 
 
+@pytest.mark.slow
 def test_train_resume_from_checkpoint():
     with tempfile.TemporaryDirectory() as d:
         train_main(["--arch", "hymba_1_5b", "--smoke", "--steps", "12",
@@ -125,6 +126,7 @@ def test_benchmark_driver_runs():
     assert "cachegrind/morton" in r.stdout
 
 
+@pytest.mark.slow
 def test_examples_quickstart():
     r = subprocess.run(
         [sys.executable, "examples/quickstart.py"],
