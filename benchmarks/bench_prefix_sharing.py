@@ -1,0 +1,139 @@
+"""COW prefix sharing under continuous batching (DESIGN.md §11).
+
+Three row families:
+
+* ``capacity`` -- how many sequences of a 75%-common-prefix trace the
+  page pool admits simultaneously, shared vs unshared (allocator-level
+  admission replay).  The regression surface CI asserts: the shared pool
+  must fit >= 2x the sequences of the unshared one.
+* ``model`` -- modeled attention-cache bytes of one decode step at
+  descending effective-occupancy ``share`` ratios (the
+  ``AttnSpec.share`` term): shared physical pages are gathered once per
+  step, not once per slot.
+* ``time`` -- measured wall time of serving the shared-prefix trace
+  through the continuous ``ServeLoop``, sharing on vs off (identical
+  tokens, regression-tested; the delta is admission + prefill work).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.energy import TPU_V5E
+from repro.models import init_model
+from repro.serve import PageAllocator, ServeConfig
+from repro.serve.paged_kv import PoolExhausted, pages_needed
+from repro.tune.cost import AttnSpec, attn_decode_bytes
+
+from .common import pick
+
+SHARES = (1.0, 0.75, 0.5, 0.25)
+
+
+def _trace(slots: int, page_size: int, prefix_pages: int,
+           tail_pages: int) -> list[list[int]]:
+    """One arrival trace: every prompt shares ``prefix_pages`` full pages
+    and carries a private ``tail_pages`` tail (75% common at 6+2)."""
+    shared = [100 + t for t in range(prefix_pages * page_size)]
+    return [shared + [1000 + 100 * i + t
+                      for t in range(tail_pages * page_size)]
+            for i in range(slots)]
+
+
+def admission_capacity(num_pages: int, page_size: int, slots: int,
+                       prompts, *, prefix_sharing: bool) -> int:
+    """Admit prompts until the pool refuses: the allocator-side half of
+    ``ServeLoop._admit_continuous`` (adopt indexed prefix, allocate the
+    rest, index the full-page prefix for the next arrival)."""
+    alloc = PageAllocator(num_pages, page_size, slots,
+                          prefix_sharing=prefix_sharing)
+    admitted = 0
+    for slot, prompt in enumerate(prompts[:slots]):
+        adopted = alloc.adopt_prefix(slot, prompt) if prefix_sharing else 0
+        try:
+            alloc.ensure_range(slot, len(prompt))
+        except PoolExhausted:
+            break
+        if adopted < len(prompt) and prefix_sharing:
+            alloc.register_prefix(slot, prompt)
+        admitted += 1
+    return admitted
+
+
+def _capacity_rows(page_size):
+    # allocator-level replay (host metadata only): its slot pool is
+    # independent of the measured serve sizes and stays wide enough for
+    # the shared pool to show its full capacity win even at smoke sizes
+    slots = 16
+    prefix_pages, tail_pages = 6, 2          # 75% of each prompt shared
+    prompts = _trace(slots, page_size, prefix_pages, tail_pages)
+    # pool sized so the unshared trace saturates quickly but one shared
+    # admission (prefix + tail + headroom) always fits
+    num_pages = pages_needed(len(prompts[0]), page_size) * 3
+    rows = []
+    caps = {}
+    for mode in ("unshared", "shared"):
+        caps[mode] = admission_capacity(
+            num_pages, page_size, slots, prompts,
+            prefix_sharing=(mode == "shared"))
+    rows.append((
+        "prefix_sharing/capacity", 0.0,
+        f"shared={caps['shared']};unshared={caps['unshared']};"
+        f"ratio={caps['shared'] / max(caps['unshared'], 1):.2f};"
+        f"pool_pages={num_pages};prefix_frac=0.75"))
+    return rows
+
+
+def _model_rows(slots, cache_len, page_size):
+    kw = dict(slots=slots, cache_len=cache_len,
+              lengths=[cache_len] * slots, n_kv_heads=8, d_head=128,
+              dtype_bytes=4)
+    rows = []
+    for share in SHARES:
+        spec = AttnSpec("paged", page_size, share=share)
+        b = 28 * attn_decode_bytes(spec, **kw)
+        rows.append((
+            f"prefix_sharing/model/share={share:g}", 0.0,
+            f"MB={b / 1e6:.4f};J={b * TPU_V5E.e_hbm:.4e};"
+            f"tag={spec.tag()}"))
+    return rows
+
+
+def _measured_rows(slots, cache_len, page_size, max_new):
+    from repro.launch.serve import ServeLoop
+
+    cfg = get_smoke_config("qwen3_1_7b")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    prompts = _trace(slots + 2, page_size, 2, 1)
+    rows = []
+    for sharing in (True, False):
+        sc = ServeConfig(slots=slots, cache_len=cache_len, layout="paged",
+                         page_size=page_size, mode="continuous",
+                         prefill_budget=2 * page_size,
+                         prefix_sharing=sharing)
+        loop = ServeLoop(cfg, params, sc)
+        for r, p in enumerate(prompts):
+            loop.submit(r, p)
+        t0 = time.time()
+        out = loop.run(max_new=max_new)
+        dt = time.time() - t0
+        toks = sum(len(v) - len(p) for v, p in zip(out.values(), prompts))
+        st = loop.alloc.stats
+        rows.append((
+            f"prefix_sharing/time/{'shared' if sharing else 'unshared'}",
+            dt * 1e6 / max(toks, 1),
+            f"requests={len(prompts)};tokens={toks};"
+            f"prefix_hits={st['prefix_hits']};cow_forks={st['cow_forks']};"
+            f"min_share={loop.energy.meta['attn_share']:.2f}"))
+    return rows
+
+
+def run():
+    slots, cache_len, page_size, max_new = pick((16, 256, 16, 8),
+                                                (4, 64, 4, 4))
+    rows = _capacity_rows(page_size)
+    rows += _model_rows(slots, cache_len, page_size)
+    rows += _measured_rows(min(slots, 4), cache_len, page_size, max_new)
+    return rows

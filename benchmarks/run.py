@@ -27,8 +27,10 @@ import time
 # stamp (git_sha, backend, power_backend) + embedded energy report;
 # 3 adds the fused-epilogue rows (bench_fused_epilogue) and the
 # BENCH_<git_sha>.json default artifact path; 4 adds the paged-KV rows
-# (bench_paged_kv: paged vs contiguous decode time/bytes/J per occupancy)
-SCHEMA_VERSION = 4
+# (bench_paged_kv: paged vs contiguous decode time/bytes/J per occupancy);
+# 5 adds the prefix-sharing rows (bench_prefix_sharing: shared-vs-unshared
+# admission capacity, share-scaled bytes, continuous-serve wall time)
+SCHEMA_VERSION = 5
 
 MODULES = [
     "bench_exec_time",        # Table IV
@@ -45,6 +47,7 @@ MODULES = [
     "bench_objective_crossover",  # Fig 5/6 crossover through the tuner
     "bench_fused_epilogue",   # DESIGN.md §9: fused vs unfused epilogue
     "bench_paged_kv",         # DESIGN.md §10: paged vs contiguous decode
+    "bench_prefix_sharing",   # DESIGN.md §11: COW prefix-sharing capacity
 ]
 
 

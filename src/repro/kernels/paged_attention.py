@@ -44,7 +44,10 @@ def _paged_attn_kernel(tab_ref, meta_ref, q_ref, k_ref, v_ref, o_ref,
                        n_kv_heads: int, max_pages: int, scale: float,
                        out_dtype):
     pg = pl.program_id(1)
-    pos = meta_ref[0]
+    # per-slot newest position: one SMEM entry per grid row, so lockstep
+    # (all equal) and continuous batching (per-slot vectors) share one
+    # kernel (DESIGN.md §11)
+    pos = meta_ref[pl.program_id(0)]
 
     @pl.when(pg == 0)
     def _init():
@@ -89,7 +92,8 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, phys_tables,
                                   cur_pos, *, interpret: bool = False):
     """q: (B, H, dh); k_pages/v_pages: (R, page_size, Hkv, dh) physical
     pool (last row reserved zero); phys_tables: (B, max_pages) physical
-    row per logical page; cur_pos: scalar int32 newest position.
+    row per logical page; cur_pos: newest position -- scalar (lockstep)
+    or (B,) per-slot vector (continuous batching).
 
     Grid is (slot, page); the block table and ``cur_pos`` are the two
     scalar-prefetch operands, so the k/v index_maps read the *physical*
@@ -137,7 +141,8 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, phys_tables,
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(phys_tables.astype(jnp.int32),
-      jnp.reshape(cur_pos, (1,)).astype(jnp.int32),
+      jnp.broadcast_to(
+          jnp.reshape(cur_pos, (-1,)).astype(jnp.int32), (b,)),
       q, k_pages, v_pages)
 
 

@@ -93,7 +93,9 @@ def paged_decode_attention_ref(q, k_pages, v_pages, phys_tables, cur_pos):
     q: (B, H, dh); k_pages/v_pages: (R, page_size, Hkv, dh) physical
     page pool whose *last row is the reserved zero row* (unallocated
     block-table entries point at it); phys_tables: (B, max_pages)
-    physical row ids; cur_pos: scalar int32 newest valid position.
+    physical row ids; cur_pos: newest valid position -- a scalar shared
+    by every slot (lockstep decode) or a (B,) vector of per-slot
+    positions (continuous batching, DESIGN.md §11).
 
     The math mirrors the contiguous ``_sdpa`` exactly -- f32 scores, a
     single direct softmax over the masked span, probabilities cast back
@@ -108,11 +110,13 @@ def paged_decode_attention_ref(q, k_pages, v_pages, phys_tables, cur_pos):
     span = max_pages * page_size
     k = k_pages[phys_tables].reshape(b, span, hkv, dh)
     v = v_pages[phys_tables].reshape(b, span, hkv, dh)
-    valid = jnp.arange(span) <= cur_pos
+    pos = jnp.broadcast_to(
+        jnp.asarray(cur_pos, jnp.int32).reshape(-1), (b,))
+    valid = jnp.arange(span)[None, :] <= pos[:, None]        # (B, span)
     qg = q.reshape(b, hkv, g, dh)
     scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32)
     scores = scores * (1.0 / math.sqrt(dh))
-    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     out = jnp.einsum("bhgk,bkhd->bhgd", w, v)
     return out.reshape(b, h, dh)

@@ -32,6 +32,7 @@ from repro.models import DotEngine, SHAPES, decode_inputs, forward, \
 from repro.models.transformer import decode_step as model_decode_step
 from repro.optim import AdamWConfig, adamw_update
 from repro.optim.compress import ef_compress
+from repro.serve.state import DecodeState, resolve_layout
 
 __all__ = ["build_train_step", "build_serve_step", "abstract_train_state",
            "abstract_decode_state"]
@@ -259,9 +260,11 @@ def make_serve_step(cfg, mesh, seq_axes, engine: DotEngine | None = None,
 
 
 def abstract_decode_state(cfg, batch: int, cache_len: int, *,
-                          paged: bool = False, page_size: int = 8):
+                          layout=None, paged: bool | None = None,
+                          page_size: int = 8):
+    layout = resolve_layout(layout, paged)
     return jax.eval_shape(
-        lambda: init_decode_state(cfg, batch, cache_len, paged=paged,
+        lambda: init_decode_state(cfg, batch, cache_len, layout=layout,
                                   page_size=page_size))
 
 
@@ -269,15 +272,18 @@ def build_serve_step(cfg, mesh, shape_name: str, *,
                      engine: DotEngine | None = None,
                      cache_len: int | None = None,
                      objective: str | None = None,
-                     paged: bool = False, page_size: int = 8):
+                     layout=None, paged: bool | None = None,
+                     page_size: int = 8):
     """Returns (jitted_fn, shardings, abstract_args) for one decode step.
 
-    ``paged=True`` builds the step over the paged KV state (DESIGN.md
-    §10): the page pool rides replicated for now
+    ``layout=KVLayout.PAGED`` builds the step over the paged KV state
+    (DESIGN.md §10): the page pool rides replicated for now
     (``shd.paged_decode_state_specs``), so the decode lowers on any mesh
     while the per-slot strips it replaces would have scaled memory with
-    ``cache_len`` regardless of live sequences.
+    ``cache_len`` regardless of live sequences.  The ``paged`` bool is
+    the deprecated spelling (DESIGN.md §11).
     """
+    layout = resolve_layout(layout, paged)
     spec = SHAPES[shape_name]
     b = spec.global_batch
     cache_len = cache_len or (
@@ -288,8 +294,12 @@ def build_serve_step(cfg, mesh, shape_name: str, *,
                            objective=objective)
 
     pspec = shd.param_specs(cfg)
-    sspec = shd.paged_decode_state_specs(cfg, mesh) if paged \
-        else shd.decode_state_specs(cfg, mesh, b, cache_len)
+    # the spec tree mirrors the DecodeState the caller passes (same
+    # pytree node, same KVLayout aux data), so the jit shardings zip
+    # leaf-for-leaf against the state
+    sspec = DecodeState(
+        shd.paged_decode_state_specs(cfg, mesh) if layout.is_paged
+        else shd.decode_state_specs(cfg, mesh, b, cache_len), layout)
     p_shd = shd.to_shardings(pspec, mesh)
     s_shd = shd.to_shardings(sspec, mesh)
     rep = NamedSharding(mesh, P())
@@ -297,7 +307,7 @@ def build_serve_step(cfg, mesh, shape_name: str, *,
     t_shd = NamedSharding(mesh, P(dp, None))
     logits_shd = NamedSharding(mesh, P(dp, None, "model"))
 
-    state_abs = abstract_decode_state(cfg, b, cache_len, paged=paged,
+    state_abs = abstract_decode_state(cfg, b, cache_len, layout=layout,
                                       page_size=page_size)
     tokens_abs, pos_abs = decode_inputs(cfg, spec, abstract=True)
 

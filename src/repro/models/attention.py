@@ -142,8 +142,9 @@ def paged_decode_attention(x, p, cfg, engine: DotEngine, k_pages, v_pages,
     for this layer (unallocated -> zero row); write_tables: (B,
     max_pages) the *logical* block table (-1 = unallocated), used to
     suppress writes through unallocated entries; cur_pos: the token's
-    position.  ``row_mask``/``residual`` behave as in
-    :func:`decode_attention`.
+    position -- a scalar shared by every slot (lockstep) or a (B,)
+    vector of per-slot positions (continuous batching, DESIGN.md §11).
+    ``row_mask``/``residual`` behave as in :func:`decode_attention`.
 
     Returns (out (B,1,d), k_pages', v_pages') with the new token's K/V
     scattered into each slot's page at (cur_pos // page_size,
@@ -156,10 +157,14 @@ def paged_decode_attention(x, p, cfg, engine: DotEngine, k_pages, v_pages,
     page_size = k_pages.shape[1]
     q, k_new, v_new = _project_qkv(x, p, cfg, engine, cos, sin)
 
-    page_idx = cur_pos // page_size
-    offset = cur_pos % page_size
-    rows = jnp.take(phys_tables, page_idx, axis=1)        # (B,)
-    wmask = jnp.take(write_tables, page_idx, axis=1) >= 0
+    pos = jnp.broadcast_to(
+        jnp.asarray(cur_pos, jnp.int32).reshape(-1), (b,))
+    page_idx = pos // page_size                           # (B,)
+    offset = pos % page_size
+    rows = jnp.take_along_axis(
+        phys_tables, page_idx[:, None], axis=1)[:, 0]     # (B,)
+    wmask = jnp.take_along_axis(
+        write_tables, page_idx[:, None], axis=1)[:, 0] >= 0
     if row_mask is not None:  # slot-isolated writes (continuous batching)
         wmask = wmask & row_mask
     # gather-select-scatter: masked rows write their own current value
@@ -170,7 +175,7 @@ def paged_decode_attention(x, p, cfg, engine: DotEngine, k_pages, v_pages,
     v_pages = v_pages.at[rows, offset].set(
         jnp.where(sel, v_new[:, 0], v_pages[rows, offset]))
 
-    out = paged_core(q[:, 0], k_pages, v_pages, phys_tables, cur_pos,
+    out = paged_core(q[:, 0], k_pages, v_pages, phys_tables, pos,
                      interpret=interpret)
     out = engine.dot(out.reshape(b, 1, -1), p["wo"], residual=residual)
     return out, k_pages, v_pages
@@ -188,13 +193,26 @@ def decode_attention(x, p, cfg, engine: DotEngine, k_cache, v_cache,
     ``residual`` fuses the block's residual add into the out-projection
     (DESIGN.md §9).
 
+    ``write_slot``/``cur_pos`` may instead be (B,) vectors -- per-row
+    positions for continuous batching (DESIGN.md §11).  The vector path
+    assumes the dense no-ring discipline the serve loop maintains
+    (``write_slot == cur_pos``, every row's cache rows [0, cur_pos] are
+    written): validity is derived per row from ``cur_pos`` alone, so a
+    request's attention never depends on co-resident slots'
+    ``cache_positions``.
+
     Returns (out (B,1,d), k_cache', v_cache') with the new entry written.
     """
     from repro.distributed import ctx as dctx
 
     b = x.shape[0]
     q, k_new, v_new = _project_qkv(x, p, cfg, engine, cos, sin)
+    vector_pos = jnp.ndim(cur_pos) > 0
     c = dctx.current()
+    if c is not None and vector_pos:
+        raise NotImplementedError(
+            "per-slot position vectors are single-device only; the "
+            "sequence-parallel decode path takes a scalar position")
     if c is not None:
         # sequence-parallel decode: KV cache sharded along S, online-softmax
         # combine across shards (repro.distributed.sp_attention).
@@ -211,6 +229,20 @@ def decode_attention(x, p, cfg, engine: DotEngine, k_cache, v_cache,
         return out, k_cache, v_cache
 
     slots = jnp.arange(k_cache.shape[1])
+    scale = 1.0 / math.sqrt(cfg.d_head)
+    if vector_pos:
+        # per-row write slot + per-row dense validity (no kv_pos): row b
+        # attends exactly to its own positions [0, cur_pos[b]]
+        sel = (slots[None, :] == write_slot[:, None])[:, :, None, None]
+        if row_mask is not None:
+            sel = sel & row_mask[:, None, None, None]
+        k_cache = jnp.where(sel, k_new, k_cache)
+        v_cache = jnp.where(sel, v_new, v_cache)
+        valid = slots[None, :] <= cur_pos[:, None]           # (B, S)
+        out = _sdpa(q, k_cache, v_cache,
+                    valid[:, None, None, None, :], scale)
+        out = engine.dot(out.reshape(b, 1, -1), p["wo"], residual=residual)
+        return out, k_cache, v_cache
     sel = (slots == write_slot)[None, :, None, None]
     if row_mask is not None:  # slot-isolated writes (continuous batching)
         sel = sel & row_mask[:, None, None, None]
@@ -220,7 +252,6 @@ def decode_attention(x, p, cfg, engine: DotEngine, k_cache, v_cache,
     valid = (pos >= 0) & (pos <= cur_pos)
     if cfg.swa_window is not None:
         valid &= pos > cur_pos - cfg.swa_window
-    scale = 1.0 / math.sqrt(cfg.d_head)
     out = _sdpa(q, k_cache, v_cache, valid[None, None, None, None, :], scale)
     out = engine.dot(out.reshape(b, 1, -1), p["wo"], residual=residual)
     return out, k_cache, v_cache

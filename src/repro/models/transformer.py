@@ -19,7 +19,8 @@ from .layers import DotEngine, init_linear, init_rms, init_swiglu, rms_norm, \
     rope, swiglu_mlp
 
 __all__ = ["init_model", "forward", "loss_fn", "init_decode_state",
-           "decode_step", "prefill_kv", "fused_epilogue_savings_bytes"]
+           "decode_step", "prefill_kv", "prefill_kv_chunk",
+           "fused_epilogue_savings_bytes"]
 
 
 def fused_epilogue_savings_bytes(cfg: ArchConfig, tokens: int) -> float:
@@ -232,18 +233,25 @@ def loss_fn(params, cfg: ArchConfig, batch, engine: DotEngine | None = None,
 
 # --------------------------------------------------------------- decode ----
 def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int,
-                      dtype=None, *, paged: bool = False,
+                      dtype=None, *, layout=None, paged: bool | None = None,
                       page_size: int = 8, num_pages: int | None = None,
                       max_pages_per_slot: int | None = None):
     """Allocate per-layer caches (stacked on layer axis for lax.scan).
 
-    ``paged=True`` returns the paged-KV state instead (DESIGN.md §10):
-    a shared physical page pool in Morton (layer, page) order plus
+    ``layout`` is a :class:`repro.serve.state.KVLayout`:
+    ``KVLayout.PAGED`` returns the paged-KV state (DESIGN.md §10) -- a
+    shared physical page pool in Morton (layer, page) order plus
     per-slot block tables; ``cache_len`` then only sizes the default
     pool (same token footprint as the contiguous strips), it no longer
-    bounds any single sequence.
+    bounds any single sequence.  The returned
+    :class:`~repro.serve.state.DecodeState` carries the layout as
+    static pytree metadata, so ``decode_step``/``prefill_kv`` dispatch
+    on it instead of sniffing key names.  The legacy ``paged=`` bool is
+    still accepted with a ``DeprecationWarning``.
     """
-    if paged:
+    from repro.serve.state import DecodeState, KVLayout, resolve_layout
+    layout = resolve_layout(layout, paged)
+    if layout is KVLayout.PAGED:
         from repro.serve.paged_kv import init_paged_decode_state
         return init_paged_decode_state(
             cfg, batch, page_size=page_size, num_pages=num_pages,
@@ -262,7 +270,25 @@ def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int,
         shp = ssm_mod.ssm_state_shape(cfg, batch)
         st["ssm_h"] = jnp.zeros((cfg.n_layers,) + shp["h"], jnp.float32)
         st["ssm_conv"] = jnp.zeros((cfg.n_layers,) + shp["conv"], dtype)
-    return st
+    return DecodeState(st, KVLayout.CONTIGUOUS)
+
+
+def _is_paged(state) -> bool:
+    """Layout dispatch: the DecodeState's static KVLayout when present,
+    the historical key sniff as a fallback for hand-built dict states."""
+    from repro.serve.state import DecodeState
+    if isinstance(state, DecodeState):
+        return state.layout.is_paged
+    return "k_pages" in state
+
+
+def _decode_rope(cfg: ArchConfig, pos):
+    """(cos, sin) for a decode step's position(s): scalar ``pos`` and
+    per-slot (B,) vectors produce (1, 1, dh/2) / (B, 1, dh/2) tables --
+    ``apply_rope`` broadcasts either against (B, 1, H, dh)."""
+    pvec = jnp.asarray(pos, jnp.int32).reshape(-1)
+    cos, sin = rope(pvec, cfg.d_head, cfg.rope_theta)
+    return cos[:, None], sin[:, None]
 
 
 def prefill_kv(params, cfg: ArchConfig, state, tokens, slot: int = 0,
@@ -311,8 +337,9 @@ def prefill_kv(params, cfg: ArchConfig, state, tokens, slot: int = 0,
 
     x, (k, v) = jax.lax.scan(body, x, params["layers"])
     k, v = k[:, 0], v[:, 0]          # (L_layers, seq, hkv, dh)
-    new_state = dict(state)
-    if "k_pages" in state:
+    from repro.serve.state import copy_state
+    new_state = copy_state(state)
+    if _is_paged(state):
         from repro.serve.paged_kv import pages_needed, physical_rows, \
             zero_row_index
         ps = state["k_pages"].shape[1]
@@ -343,21 +370,163 @@ def prefill_kv(params, cfg: ArchConfig, state, tokens, slot: int = 0,
     return _mask_padded_vocab(logits, cfg), new_state
 
 
+def prefill_kv_chunk(params, cfg: ArchConfig, state, tokens, slots,
+                     starts, lengths, engine: DotEngine | None = None):
+    """Chunked, batched prefill: one prompt *chunk* per row, written
+    through the block tables (paged) or into the contiguous strips.
+
+    tokens: (G, L) int32 -- G gang rows padded to a common chunk width L;
+    slots: (G,) decode-slot ids (distinct); starts: (G,) absolute
+    position of each row's first token; lengths: (G,) valid tokens per
+    row (0 <= lengths <= L; pad columns -- and whole pad rows with
+    length 0 -- are ignored).  Chunk queries
+    attend to the slot's *full written span* [0, starts+lengths) -- the
+    earlier chunks are read back out of the cache -- so interleaving
+    chunks between decode steps reproduces the single-shot
+    :func:`prefill_kv` K/V exactly.  Positions must already be writable
+    (contiguous: within cache_len; paged: covered by allocated pages,
+    see ``PageAllocator.ensure_range``).
+
+    Returns the new state only: chunk logits are never sampled from (the
+    serve loop samples the first generated token from a decode step fed
+    the prompt's last token, DESIGN.md §11), so the final-norm/lm_head
+    compute is skipped.  Attention-only families, like ``prefill_kv``.
+    """
+    engine = engine or DotEngine()
+    if not cfg.has_attention or cfg.has_ssm:
+        raise ValueError(
+            f"chunked prefill needs a pure-attention family, got "
+            f"{cfg.family!r}")
+    import math as _math
+
+    from repro.serve.state import copy_state
+
+    toks = jnp.asarray(tokens, jnp.int32)
+    g, chunk = toks.shape
+    slots_v = jnp.asarray(slots, jnp.int32).reshape(-1)
+    starts_v = jnp.asarray(starts, jnp.int32).reshape(-1)
+    lens_v = jnp.asarray(lengths, jnp.int32).reshape(-1)
+    pos2d = starts_v[:, None] + jnp.arange(chunk, dtype=jnp.int32)  # (G, L)
+    valid = jnp.arange(chunk)[None, :] < lens_v[:, None]            # (G, L)
+    x = jnp.take(params["embed"], toks, axis=0).astype(cfg.act_jdtype())
+    if cfg.rope:
+        cos, sin = rope(pos2d, cfg.d_head, cfg.rope_theta)  # (G, L, dh/2)
+    else:
+        cos = sin = None
+    scale = 1.0 / _math.sqrt(cfg.d_head)
+    wsel = valid[:, :, None, None]
+    paged = _is_paged(state)
+    new_state = copy_state(state)
+
+    if paged:
+        from repro.serve.paged_kv import physical_rows, zero_row_index
+        ps = state["k_pages"].shape[1]
+        zero_row = zero_row_index(state["k_pages"])
+        bt = state["block_tables"]
+        max_pages = bt.shape[1]
+        span = max_pages * ps
+        pg2d = jnp.minimum(pos2d // ps, max_pages - 1)        # (G, L)
+        off2d = pos2d % ps
+        # suppress writes through pad columns and unallocated entries
+        wmask = valid & (
+            jnp.take_along_axis(bt[slots_v], pg2d, axis=1) >= 0)
+        # gather-select-write-back: masked entries (all aliasing the
+        # reserved zero row) rewrite their current value, keeping
+        # duplicate scatter indices deterministic
+        wselp = wmask[:, :, None, None]
+    else:
+        ps = span = 0
+
+    def _chunk_layer(x, lp, k_cache, v_cache, phys):
+        """One layer: project the chunk, scatter K/V, attend over the
+        slot's full written span, finish the block.  Returns
+        (x', k_cache', v_cache')."""
+        h = rms_norm(x, lp["norm1"])
+        q, k, v = attn_mod._project_qkv(h, lp["attn"], cfg, engine,
+                                        cos, sin)
+        if paged:
+            rows = jnp.take_along_axis(phys[slots_v], pg2d, axis=1)
+            k_cache = k_cache.at[rows, off2d].set(
+                jnp.where(wselp, k, k_cache[rows, off2d]))
+            v_cache = v_cache.at[rows, off2d].set(
+                jnp.where(wselp, v, v_cache[rows, off2d]))
+            kf = k_cache[phys[slots_v]].reshape(g, span, *k.shape[2:])
+            vf = v_cache[phys[slots_v]].reshape(g, span, *v.shape[2:])
+            sk = span
+        else:
+            c = k_cache.shape[1]
+            p2 = jnp.minimum(pos2d, c - 1)
+            cur = k_cache[slots_v[:, None], p2]
+            k_cache = k_cache.at[slots_v[:, None], p2].set(
+                jnp.where(wsel, k, cur))
+            cur = v_cache[slots_v[:, None], p2]
+            v_cache = v_cache.at[slots_v[:, None], p2].set(
+                jnp.where(wsel, v, cur))
+            kf = k_cache[slots_v]                       # (G, C, hkv, dh)
+            vf = v_cache[slots_v]
+            sk = c
+        # causal over the written extent only: key t visible to chunk
+        # query at position p iff t <= min(p, starts+lengths-1)
+        kpos = jnp.arange(sk, dtype=jnp.int32)[None, None, :]
+        mask = kpos <= jnp.minimum(
+            pos2d, (starts_v + lens_v - 1)[:, None])[:, :, None]
+        o = attn_mod._sdpa(q, kf, vf, mask[:, None, None], scale)
+        x = engine.dot(o.reshape(g, chunk, -1), lp["attn"]["wo"],
+                       residual=x)
+        if cfg.family in ("dense", "vlm"):
+            x = swiglu_mlp(rms_norm(x, lp["norm2"]), lp["mlp"], engine,
+                           residual=x)
+        else:  # moe
+            y, _ = moe_mod.moe_ffn(
+                rms_norm(x, lp["norm2"]), lp["moe"], cfg, engine,
+                impl="dense")
+            x = x + y
+        return x, k_cache, v_cache
+
+    if paged:
+        def body(carry, layer):
+            x, kp, vp = carry
+            phys = physical_rows(layer["perm"], bt, zero_row)
+            x, kp, vp = _chunk_layer(x, layer["p"], kp, vp, phys)
+            return (x, kp, vp), None
+
+        (x, kp, vp), _ = jax.lax.scan(
+            body, (x, state["k_pages"], state["v_pages"]),
+            {"p": params["layers"], "perm": state["page_perm"]})
+        new_state["k_pages"] = kp
+        new_state["v_pages"] = vp
+    else:
+        def body(x, layer):
+            x, kc, vc = _chunk_layer(x, layer["p"], layer["k"],
+                                     layer["v"], None)
+            return x, (kc, vc)
+
+        x, (kc, vc) = jax.lax.scan(
+            body, x, {"p": params["layers"], "k": state["k"],
+                      "v": state["v"]})
+        new_state["k"] = kc
+        new_state["v"] = vc
+        # dense discipline: slot p holds position p (the vector decode
+        # path never reads kv_pos; scalar lockstep still can)
+        flat_idx = jnp.where(valid, pos2d, 0).reshape(-1)
+        flat_val = jnp.where(valid, pos2d, -1).reshape(-1)
+        new_state["kv_pos"] = state["kv_pos"].at[flat_idx].max(flat_val)
+    return new_state
+
+
 def _decode_step_paged(params, cfg: ArchConfig, state, tokens, pos,
                        engine: DotEngine, row_mask):
     """Paged-cache decode step (DESIGN.md §10): the physical page pool is
     a scan *carry* (Morton interleaving means one layer's rows are not a
     contiguous slice, so the pool cannot be scanned as per-layer xs);
     each layer resolves its block table through its row of the Morton
-    permutation and gathers/scatters its own pages."""
+    permutation and gathers/scatters its own pages.  ``pos`` is a scalar
+    (lockstep) or a (B,) per-slot vector (continuous batching)."""
     from repro.serve.paged_kv import physical_rows, zero_row_index
+    from repro.serve.state import copy_state
 
     x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_jdtype())
-    if cfg.rope:
-        cos, sin = rope(pos[None], cfg.d_head, cfg.rope_theta)
-        cos, sin = cos[None], sin[None]
-    else:
-        cos = sin = None
+    cos, sin = _decode_rope(cfg, pos) if cfg.rope else (None, None)
     zero_row = zero_row_index(state["k_pages"])
     bt = state["block_tables"]
 
@@ -385,7 +554,7 @@ def _decode_step_paged(params, cfg: ArchConfig, state, tokens, pos,
     (x, kp, vp), _ = jax.lax.scan(
         body, (x, state["k_pages"], state["v_pages"]),
         {"p": params["layers"], "perm": state["page_perm"]})
-    new_state = dict(state)
+    new_state = copy_state(state)
     new_state["k_pages"] = kp
     new_state["v_pages"] = vp
     x = rms_norm(x, params["final_norm"])
@@ -395,23 +564,27 @@ def _decode_step_paged(params, cfg: ArchConfig, state, tokens, pos,
 
 def decode_step(params, cfg: ArchConfig, state, tokens, pos,
                 engine: DotEngine | None = None, row_mask=None):
-    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 position.
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 position
+    shared by every row (lockstep), or a (B,) vector of per-row
+    positions (continuous batching -- each request advances on its own
+    clock, DESIGN.md §11; requires ``cfg.swa_window is None``).
 
     Returns (logits (B, 1, V), new_state).  The KV cache is a ring buffer
-    when SWA bounds it (slot = pos % cache_len); dense otherwise.  A
-    paged state (``init_decode_state(..., paged=True)``) is auto-detected
-    and routed through the paged attention path (DESIGN.md §10).
+    when SWA bounds it (slot = pos % cache_len); dense otherwise.  The
+    layout is read off the :class:`~repro.serve.state.DecodeState`
+    (``KVLayout.PAGED`` routes through the paged attention path,
+    DESIGN.md §10); hand-built dict states fall back to key sniffing.
     ``row_mask`` (B,) bool: rows with False keep their caches/states
     untouched (slot-isolated writes for continuous batching).
     """
     engine = engine or DotEngine()
-    if "k_pages" in state:
+    if _is_paged(state):
         return _decode_step_paged(params, cfg, state, tokens, pos,
                                   engine, row_mask)
+    from repro.serve.state import copy_state
     x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.act_jdtype())
     if cfg.has_attention and cfg.rope:
-        cos, sin = rope(pos[None], cfg.d_head, cfg.rope_theta)
-        cos, sin = cos[None], sin[None]  # (B=1bc, S=1, dh/2)
+        cos, sin = _decode_rope(cfg, pos)  # (1|B, 1, dh/2)
     else:
         cos = sin = None
     cache_len = state["k"].shape[2] if cfg.has_attention else 0
@@ -470,7 +643,7 @@ def decode_step(params, cfg: ArchConfig, state, tokens, pos,
         if key in state:
             xs[key] = state[key]
     x, upd = jax.lax.scan(body, x, xs)
-    new_state = dict(state)
+    new_state = copy_state(state)
     for key in ("ssm_h", "ssm_conv"):
         if key in upd:
             new_state[key] = upd[key]

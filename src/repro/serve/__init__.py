@@ -1,10 +1,19 @@
-# Paged KV cache serving subsystem (DESIGN.md §10): page allocator with
-# per-slot block tables, Morton physical layout over the (layer, page)
-# grid, and the decode-state constructors the launch layer consumes.
+# Serving subsystem: paged KV cache (DESIGN.md §10) -- page allocator
+# with per-slot block tables, Morton physical layout over the
+# (layer, page) grid -- plus the continuous-batching layer (DESIGN.md
+# §11): explicit KV layouts on the decode state, refcounted
+# copy-on-write prefix sharing, and the ServeConfig the launch layer
+# consumes.
+from .config import ServeConfig  # noqa: F401
 from .paged_kv import (  # noqa: F401
     PageAllocator,
+    PoolExhausted,
+    PrefixIndex,
     init_paged_decode_state,
+    init_paged_serving,
     page_permutation,
     pages_needed,
+    physical_rows,
     zero_row_index,
 )
+from .state import DecodeState, KVLayout, copy_state, resolve_layout  # noqa: F401

@@ -1,0 +1,69 @@
+"""ServeLoop configuration (DESIGN.md §11).
+
+One frozen dataclass holds every knob the serving driver takes --
+historically nine loose ``ServeLoop(...)`` keyword arguments, now a
+value that can be built once, defaulted, validated in one place, and
+mapped 1:1 onto the CLI flags of ``repro.launch.serve``.  The legacy
+kwargs still work through a ``DeprecationWarning`` shim on the loop's
+constructor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from .state import KVLayout, resolve_layout
+
+__all__ = ["ServeConfig"]
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Everything the serving loop is parameterised by.
+
+    Scheduling: ``mode="lockstep"`` is the historical whole-prompt-
+    prefill-then-decode-together loop; ``mode="continuous"`` admits and
+    retires requests mid-flight with chunked prefill interleaved into
+    decode steps under ``prefill_budget`` prompt tokens per step
+    (DESIGN.md §11).  ``prefix_sharing`` (paged + continuous) maps
+    page-aligned common prompt prefixes onto shared physical pages with
+    copy-on-write -- it changes memory behaviour, never tokens.
+
+    Layout: ``layout`` is a :class:`~repro.serve.state.KVLayout` (string
+    names accepted for CLI plumbing); ``page_size``/``num_pages`` shape
+    the paged pool and are ignored under CONTIGUOUS.
+    """
+
+    slots: int = 4
+    cache_len: int = 128
+    temperature: float = 0.0
+    eos_id: int = 1
+    seed: int = 0
+    objective: str | None = None
+    layout: KVLayout = KVLayout.CONTIGUOUS
+    page_size: int = 8
+    num_pages: int | None = None
+    mode: str = "lockstep"
+    prefill_budget: int = 32
+    prefix_sharing: bool = True
+
+    def __post_init__(self):
+        # normalise string layouts ("paged" from argparse) to the enum
+        object.__setattr__(
+            self, "layout", resolve_layout(self.layout or None))
+        if self.mode not in ("lockstep", "continuous"):
+            raise ValueError(
+                f"mode must be 'lockstep' or 'continuous', got "
+                f"{self.mode!r}")
+        if self.slots < 1 or self.cache_len < 1:
+            raise ValueError((self.slots, self.cache_len))
+        if self.prefill_budget < 1:
+            raise ValueError(
+                f"prefill_budget must be >= 1, got {self.prefill_budget}")
+
+    @property
+    def paged(self) -> bool:
+        return self.layout.is_paged
+
+    def replace(self, **kw) -> "ServeConfig":
+        return dataclasses.replace(self, **kw)

@@ -27,9 +27,10 @@ import numpy as np
 
 from repro.core.schedule import grid_schedule
 
-__all__ = ["PageAllocator", "PoolExhausted", "page_permutation",
-           "init_paged_decode_state", "init_paged_serving",
-           "zero_row_index", "pages_needed", "physical_rows"]
+__all__ = ["PageAllocator", "PoolExhausted", "PrefixIndex",
+           "page_permutation", "init_paged_decode_state",
+           "init_paged_serving", "zero_row_index", "pages_needed",
+           "physical_rows"]
 
 
 class PoolExhausted(RuntimeError):
@@ -66,6 +67,68 @@ def zero_row_index(k_pages) -> int:
     return k_pages.shape[0] - 1
 
 
+class PrefixIndex:
+    """Radix-style index of *full* prompt pages by content (DESIGN.md §11).
+
+    Each edge is one full page keyed by its ``page_size``-token tuple;
+    a walk from the root matches the longest indexed page-aligned prompt
+    prefix.  Only full pages are indexed: a partial tail page grows as
+    its owner appends, so a content key for it would go stale -- partial
+    tails stay private and are shared only through explicit table clones
+    (:meth:`PageAllocator.clone_table`), where copy-on-write protects
+    them.  Eviction removes a single edge; orphaned descendants become
+    unreachable (a walk stops at the missing parent) and drain through
+    the cached-free FIFO like any other cold page.
+    """
+
+    def __init__(self):
+        self._root: dict[tuple, int] = {}
+        # pid -> children dict of the node *after* that page
+        self._children: dict[int, dict[tuple, int]] = {}
+        # pid -> (parent children dict, edge key): eviction backref
+        self._owner: dict[int, tuple[dict, tuple]] = {}
+
+    def __contains__(self, pid: int) -> bool:
+        return pid in self._owner
+
+    def __len__(self) -> int:
+        return len(self._owner)
+
+    def _chunks(self, tokens, page_size: int):
+        for pg in range(len(tokens) // page_size):
+            yield tuple(tokens[pg * page_size:(pg + 1) * page_size])
+
+    def match(self, tokens, page_size: int) -> list[int]:
+        """Longest indexed full-page prefix of ``tokens`` -> page ids."""
+        cur, out = self._root, []
+        for tup in self._chunks(tokens, page_size):
+            pid = cur.get(tup)
+            if pid is None:
+                break
+            out.append(pid)
+            cur = self._children.setdefault(pid, {})
+        return out
+
+    def insert(self, tokens, page_ids, page_size: int) -> None:
+        """Index ``page_ids`` as the full-page prefix of ``tokens``.
+        Existing edges win (first writer keeps the canonical page)."""
+        cur = self._root
+        for tup, pid in zip(self._chunks(tokens, page_size), page_ids):
+            have = cur.get(tup)
+            if have is None:
+                cur[tup] = int(pid)
+                self._owner[int(pid)] = (cur, tup)
+                have = int(pid)
+            cur = self._children.setdefault(have, {})
+
+    def evict(self, pid: int) -> None:
+        owner = self._owner.pop(int(pid), None)
+        if owner is not None:
+            children, key = owner
+            children.pop(key, None)
+        self._children.pop(int(pid), None)
+
+
 class PageAllocator:
     """Free-list page allocator with per-slot block tables (host-side).
 
@@ -74,10 +137,21 @@ class PageAllocator:
     never sees physical indices).  The free list is LIFO, so a released
     slot's pages are handed to the next admission first -- maximum reuse
     of warm rows, and the property the reuse tests pin down.
+
+    Pages are reference counted (DESIGN.md §11): block tables of several
+    slots may map the same physical page (prefix sharing via
+    :class:`PrefixIndex`, or a whole-table :meth:`clone_table` fork for
+    parallel sampling), ``release`` decrements, and a page returns to a
+    free pool only at refcount zero.  Writes into a shared page go
+    through :meth:`fork` -- copy-on-write, the caller device-copies the
+    rows.  ``prefix_sharing=False`` (the default) keeps the allocator
+    bit-compatible with the PR 5 behaviour: no index, a single LIFO
+    pool, every historical invariant intact.
     """
 
     def __init__(self, num_pages: int, page_size: int, slots: int,
-                 max_pages_per_slot: int | None = None):
+                 max_pages_per_slot: int | None = None, *,
+                 prefix_sharing: bool = False):
         if num_pages < 1 or page_size < 1 or slots < 1:
             raise ValueError((num_pages, page_size, slots))
         self.num_pages = int(num_pages)
@@ -86,20 +160,28 @@ class PageAllocator:
         self.max_pages_per_slot = int(max_pages_per_slot or num_pages)
         # LIFO free list: pop() hands out the most recently freed page
         self._free: list[int] = list(range(self.num_pages - 1, -1, -1))
+        # freed pages whose content is still indexed (prefix cache):
+        # revivable on an index hit, evicted FIFO (coldest first) when
+        # the plain pool runs dry
+        self._free_cached: list[int] = []
         self.block_table = np.full(
             (self.slots, self.max_pages_per_slot), -1, np.int32)
         self.seq_lens = np.zeros(self.slots, np.int32)
+        self.ref = np.zeros(self.num_pages, np.int32)
+        self.prefix_sharing = bool(prefix_sharing)
+        self.index = PrefixIndex() if prefix_sharing else None
         self._ever_freed: set[int] = set()
-        self.stats = {"allocated": 0, "freed": 0, "reused": 0}
+        self.stats = {"allocated": 0, "freed": 0, "reused": 0,
+                      "cow_forks": 0, "prefix_hits": 0, "shared_pages": 0}
 
     # ------------------------------------------------------------- queries --
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        return len(self._free) + len(self._free_cached)
 
     @property
     def pages_in_use(self) -> int:
-        return self.num_pages - len(self._free)
+        return self.num_pages - self.free_pages
 
     def occupancy(self) -> float:
         return self.pages_in_use / self.num_pages
@@ -131,15 +213,26 @@ class PageAllocator:
                 f"({page_idx} >= {self.max_pages_per_slot} pages); "
                 f"raise max_pages_per_slot / num_pages")
 
+    def _pop_free(self) -> int:
+        """A fresh page id: the plain LIFO pool first (warm rows, the
+        historical behaviour), then FIFO eviction from the prefix-cached
+        pool -- the coldest cached page loses its index entry."""
+        if self._free:
+            return self._free.pop()
+        if self._free_cached:
+            pid = self._free_cached.pop(0)
+            self.index.evict(pid)
+            return pid
+        raise PoolExhausted(
+            f"KV page pool exhausted ({self.num_pages} pages of "
+            f"{self.page_size} tokens); raise num_pages or lower "
+            f"concurrency")
+
     def _alloc_one(self, slot: int, page_idx: int) -> int:
         self._check_extent(slot, page_idx)
-        if not self._free:
-            raise PoolExhausted(
-                f"KV page pool exhausted ({self.num_pages} pages of "
-                f"{self.page_size} tokens); raise num_pages or lower "
-                f"concurrency")
-        pid = self._free.pop()
+        pid = self._pop_free()
         self.block_table[slot, page_idx] = pid
+        self.ref[pid] = 1
         self.stats["allocated"] += 1
         if pid in self._ever_freed:
             self.stats["reused"] += 1
@@ -173,15 +266,133 @@ class PageAllocator:
         return new
 
     def release(self, slot: int) -> list[int]:
-        """Free every page of ``slot`` (metadata only -- copy-free)."""
-        freed = self.slot_pages(slot)
-        for pid in freed:
-            self._free.append(pid)
+        """Drop ``slot``'s references (metadata only -- copy-free).
+
+        A page returns to a free pool only when its refcount hits zero:
+        pages still mapped by another slot's table (shared prefix, COW
+        sibling) stay allocated -- the refcount-release-ordering
+        invariant preemption relies on.  Zero-ref pages whose content is
+        still in the prefix index park on the cached FIFO (revivable);
+        the rest go back on the plain LIFO list.  Returns the pages
+        actually freed."""
+        freed: list[int] = []
+        for pid in self.slot_pages(slot):
+            self.ref[pid] -= 1
+            assert self.ref[pid] >= 0, (pid, self.ref[pid])
+            if self.ref[pid] > 0:
+                continue
+            if self.index is not None and pid in self.index:
+                self._free_cached.append(pid)
+            else:
+                self._free.append(pid)
             self._ever_freed.add(pid)
+            freed.append(pid)
         self.stats["freed"] += len(freed)
         self.block_table[slot] = -1
         self.seq_lens[slot] = 0
         return freed
+
+    # ----------------------------------------------- sharing / copy-on-write
+    def refcount(self, pid: int) -> int:
+        return int(self.ref[pid])
+
+    def clone_table(self, src: int, dst: int) -> list[int]:
+        """Fork ``src``'s whole block table into ``dst`` (parallel
+        sampling over one prompt): every mapped page -- full prefix
+        pages *and* the partial tail -- is shared by reference, no data
+        moves.  First write into any shared page copy-on-write forks it
+        (:meth:`fork`).  Returns the shared page ids."""
+        shared = self.slot_pages(src)
+        self.block_table[dst] = self.block_table[src]
+        self.seq_lens[dst] = self.seq_lens[src]
+        for pid in shared:
+            self.ref[pid] += 1
+        self.stats["shared_pages"] += len(shared)
+        return shared
+
+    def adopt_prefix(self, slot: int, tokens) -> int:
+        """Map the longest indexed page-aligned prefix of ``tokens``
+        into ``slot``'s table by reference.  Returns the shared length
+        in tokens (0 when sharing is off or nothing matches).  Live
+        matched pages gain a reference; cached (freed-but-indexed) ones
+        are revived off the FIFO *without a scrub* -- their content is
+        the prefix being requested."""
+        if self.index is None:
+            return 0
+        matched = self.index.match(tokens, self.page_size)
+        for pg, pid in enumerate(matched):
+            self._check_extent(slot, pg)
+            if self.ref[pid] == 0:
+                self._free_cached.remove(pid)
+                self.ref[pid] = 1
+            else:
+                self.ref[pid] += 1
+            self.block_table[slot, pg] = pid
+        n = len(matched)
+        if n:
+            self.stats["prefix_hits"] += n
+            self.stats["shared_pages"] += n
+            self.seq_lens[slot] = max(
+                self.seq_lens[slot], n * self.page_size)
+        return n * self.page_size
+
+    def register_prefix(self, slot: int, tokens) -> None:
+        """Index ``slot``'s full-page prefix of ``tokens`` for future
+        admissions.  Full pages only: the partial tail keeps growing
+        under decode writes, so its content key would go stale."""
+        if self.index is None:
+            return
+        full = len(tokens) // self.page_size
+        pids = [int(p) for p in self.block_table[slot, :full]]
+        if all(p >= 0 for p in pids):
+            self.index.insert(tokens, pids, self.page_size)
+
+    def needs_fork(self, slot: int, position: int) -> bool:
+        """True when a write at ``position`` would land in a page
+        another table also maps (refcount > 1) -- the caller must
+        :meth:`fork` first."""
+        page_idx = int(position) // self.page_size
+        if page_idx >= self.max_pages_per_slot:
+            return False  # extent error surfaces in ensure(), not here
+        pid = self.block_table[slot, page_idx]
+        return pid >= 0 and self.ref[pid] > 1
+
+    def fork(self, slot: int, position: int) -> tuple[int, int]:
+        """Copy-on-write fork of the shared page holding ``position``:
+        allocate a private page for ``slot``, drop one reference on the
+        shared original, and return ``(old_pid, new_pid)`` so the caller
+        can device-copy the rows (the allocator is host-side metadata
+        only).  The copy overwrites every row of the new page, so no
+        scrub is needed regardless of the page's history."""
+        page_idx = int(position) // self.page_size
+        old = int(self.block_table[slot, page_idx])
+        assert old >= 0 and self.ref[old] > 1, (slot, page_idx, old)
+        new = self._pop_free()
+        self.ref[new] = 1
+        self.ref[old] -= 1
+        self.block_table[slot, page_idx] = new
+        self.stats["allocated"] += 1
+        self.stats["cow_forks"] += 1
+        if new in self._ever_freed:
+            self.stats["reused"] += 1
+        return old, new
+
+    def check_invariants(self) -> None:
+        """Refcount bookkeeping audit (tests): every pool page is either
+        free exactly once or referenced by exactly ``ref`` table
+        entries, and the two never overlap."""
+        free = list(self._free) + list(self._free_cached)
+        assert len(free) == len(set(free)), "double-free"
+        counts = np.zeros(self.num_pages, np.int64)
+        for s in range(self.slots):
+            for pid in self.slot_pages(s):
+                counts[pid] += 1
+        for pid in range(self.num_pages):
+            if pid in set(free):
+                assert self.ref[pid] == 0 and counts[pid] == 0, pid
+            else:
+                assert self.ref[pid] == counts[pid] > 0, \
+                    (pid, int(self.ref[pid]), int(counts[pid]))
 
     def active_lengths(self) -> np.ndarray:
         return self.seq_lens.copy()
@@ -240,19 +451,21 @@ def init_paged_decode_state(cfg, slots: int, *, page_size: int = 8,
     rows = cfg.n_layers * num_pages + 1  # +1: the shared zero row
     k_pages = jnp.zeros(
         (rows, page_size, cfg.n_kv_heads, cfg.d_head), dtype)
-    return {
+    from repro.serve.state import DecodeState, KVLayout
+    return DecodeState({
         "k_pages": k_pages,
         "v_pages": jnp.zeros_like(k_pages),
         "page_perm": jnp.asarray(
             page_permutation(cfg.n_layers, num_pages)),
         "block_tables": jnp.full(
             (slots, max_pages_per_slot), -1, jnp.int32),
-    }
+    }, KVLayout.PAGED)
 
 
 def init_paged_serving(cfg, slots: int, cache_len: int, *,
                        page_size: int = 8, num_pages: int | None = None,
-                       max_pages_per_slot: int | None = None, dtype=None):
+                       max_pages_per_slot: int | None = None, dtype=None,
+                       prefix_sharing: bool = False):
     """One-stop constructor: a :class:`PageAllocator` and its device
     state, guaranteed to agree on pool size and block-table width (a
     mismatch would let logical ids index past ``page_perm`` and
@@ -261,7 +474,8 @@ def init_paged_serving(cfg, slots: int, cache_len: int, *,
         slots, cache_len, page_size)
     max_pages_per_slot = max_pages_per_slot or default_slot_pages(
         num_pages, cache_len, page_size)
-    alloc = PageAllocator(num_pages, page_size, slots, max_pages_per_slot)
+    alloc = PageAllocator(num_pages, page_size, slots, max_pages_per_slot,
+                          prefix_sharing=prefix_sharing)
     state = init_paged_decode_state(
         cfg, slots, page_size=page_size, num_pages=num_pages,
         max_pages_per_slot=max_pages_per_slot, cache_len=cache_len,

@@ -1,0 +1,137 @@
+"""Decode-state container with an explicit KV-cache layout (DESIGN.md §11).
+
+Historically ``init_decode_state(paged=True)`` returned a bare dict and
+every consumer sniffed the structure (``"k_pages" in state``) to pick the
+decode path.  :class:`KVLayout` makes the layout an explicit enum and
+:class:`DecodeState` carries it on the state itself as *static pytree
+metadata*: the mapping flattens to its array leaves (jit/shardings/
+donation all see the same tree a plain dict would produce) while the
+layout rides in ``aux_data``, so trace-time dispatch never has to touch
+a traced value and never has to guess from key names.
+
+``DecodeState`` is deliberately dict-like (``Mapping`` plus item
+assignment): every existing call site that reads ``state["k_pages"]`` or
+writes ``state["block_tables"]`` keeps working unchanged, and
+``state.copy()`` preserves the layout where ``dict(state)`` would have
+dropped it.
+"""
+from __future__ import annotations
+
+import enum
+import warnings
+from collections.abc import Mapping
+from typing import Any
+
+import jax
+
+__all__ = ["KVLayout", "DecodeState", "resolve_layout", "copy_state"]
+
+
+class KVLayout(enum.Enum):
+    """How the decode-step KV cache is laid out in memory.
+
+    CONTIGUOUS: per-slot ``cache_len`` strips (dense ``(L, B, C, hkv,
+    dh)`` arrays, the classic layout).  PAGED: the shared Morton-ordered
+    page pool with per-slot block tables (DESIGN.md §10).
+    """
+
+    CONTIGUOUS = "contiguous"
+    PAGED = "paged"
+
+    @property
+    def is_paged(self) -> bool:
+        return self is KVLayout.PAGED
+
+
+def resolve_layout(layout: "KVLayout | str | None",
+                   paged: bool | None = None,
+                   *, stacklevel: int = 3) -> KVLayout:
+    """One deprecation shim for every ``paged=`` boolean entry point.
+
+    ``layout`` wins when given (string names accepted for CLI plumbing);
+    a legacy ``paged=`` bool maps onto the enum with a
+    ``DeprecationWarning``; neither means CONTIGUOUS.
+    """
+    if layout is not None:
+        if isinstance(layout, str):
+            layout = KVLayout(layout.lower())
+        if paged is not None and (layout is KVLayout.PAGED) != bool(paged):
+            raise ValueError(
+                f"conflicting layout={layout} and paged={paged}")
+        return layout
+    if paged is not None:
+        warnings.warn(
+            "paged=<bool> is deprecated; pass layout=KVLayout.PAGED / "
+            "KVLayout.CONTIGUOUS instead", DeprecationWarning,
+            stacklevel=stacklevel)
+        return KVLayout.PAGED if paged else KVLayout.CONTIGUOUS
+    return KVLayout.CONTIGUOUS
+
+
+@jax.tree_util.register_pytree_node_class
+class DecodeState(Mapping):
+    """Dict of decode-cache arrays + the static :class:`KVLayout`.
+
+    Flattens to ``(values, (keys, layout))``: the layout is hashable
+    aux_data, so two states with different layouts are *different jit
+    cache entries* even if their array shapes coincide -- dispatch is
+    structural, not value-dependent.
+    """
+
+    __slots__ = ("_data", "layout")
+
+    def __init__(self, data: Mapping[str, Any],
+                 layout: KVLayout = KVLayout.CONTIGUOUS):
+        self._data = dict(data)
+        self.layout = layout
+
+    # -------------------------------------------------- mapping protocol --
+    def __getitem__(self, key: str) -> Any:
+        return self._data[key]
+
+    def __setitem__(self, key: str, value: Any) -> None:
+        self._data[key] = value
+
+    def __contains__(self, key: object) -> bool:
+        return key in self._data
+
+    def __iter__(self):
+        return iter(self._data)
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def keys(self):
+        return self._data.keys()
+
+    def values(self):
+        return self._data.values()
+
+    def items(self):
+        return self._data.items()
+
+    def copy(self) -> "DecodeState":
+        return DecodeState(self._data, self.layout)
+
+    def __repr__(self) -> str:
+        return (f"DecodeState(layout={self.layout.name}, "
+                f"keys={sorted(self._data)})")
+
+    # --------------------------------------------------------- pytree -----
+    def tree_flatten(self):
+        keys = tuple(sorted(self._data))
+        return tuple(self._data[k] for k in keys), (keys, self.layout)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        keys, layout = aux
+        return cls(dict(zip(keys, children)), layout)
+
+
+def copy_state(state) -> Any:
+    """Shallow-copy a decode state preserving its type: ``DecodeState``
+    keeps its layout, a plain dict (legacy callers constructing states
+    by hand) stays a dict."""
+    if isinstance(state, DecodeState):
+        return state.copy()
+    return dict(state)

@@ -4,12 +4,15 @@
 # Winners are adjudicated under a pluggable objective -- wall time,
 # joules, or energy-delay product (DESIGN.md §8).
 from .autotune import (  # noqa: F401
+    DecodeAttnSpec,
+    GemmSpec,
     TuneResult,
     autotune,
     autotune_attn,
     candidate_configs,
     f_scale_candidates,
     measure_config,
+    resolve,
     resolve_attn_config,
     resolve_config,
     resolved_attn_f_scale,

@@ -38,7 +38,8 @@ from .objective import OBJECTIVES, objective_value
 
 __all__ = ["TuneResult", "candidate_configs", "autotune", "resolve_config",
            "measure_config", "f_scale_candidates", "resolved_f_scale",
-           "autotune_attn", "resolve_attn_config", "resolved_attn_f_scale"]
+           "autotune_attn", "resolve_attn_config", "resolved_attn_f_scale",
+           "GemmSpec", "DecodeAttnSpec", "resolve"]
 
 _BLOCK_CANDIDATES = (
     (128, 128, 128),
@@ -632,3 +633,96 @@ def resolved_attn_f_scale(
         slots, cache_len, n_heads=n_heads, n_kv_heads=n_kv_heads,
         d_head=d_head, dtype=dtype, attn=attn, backend=backend,
         cache=cache, objective=objective).f_scale
+
+
+# ------------------------------------------------------ unified resolve ----
+@dataclass(frozen=True)
+class GemmSpec:
+    """A GEMM tuning problem as a value: what :func:`resolve_config`
+    took as six positional/keyword arguments, packaged so call sites
+    build the spec once and hand it around (launch layer, benchmarks).
+    ``epilogue`` is the fused bias/activation/residual the caller will
+    attach (DESIGN.md §9)."""
+
+    m: int
+    n: int
+    k: int
+    dtype: str = "float32"
+    batched: bool = False
+    epilogue: EpilogueSpec | None = None
+
+
+@dataclass(frozen=True)
+class DecodeAttnSpec:
+    """A decode-attention tuning problem as a value -- the attention
+    twin of :class:`GemmSpec`.  ``attn`` is the cache-layout
+    :class:`~repro.tune.cost.AttnSpec` (contig / paged / shared)."""
+
+    slots: int
+    cache_len: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    dtype: str = "float32"
+    attn: AttnSpec = AttnSpec()
+
+
+def resolve(
+    spec,
+    *,
+    backend: str | None = None,
+    cache: TuneCache | None = None,
+    objective: str = "time",
+    search: bool = False,
+    **search_kw,
+):
+    """One tuning entrypoint for every problem kind (DESIGN.md §11).
+
+    Dispatches on the spec's type: :class:`GemmSpec` routes through the
+    GEMM keyspace (``mm/`` / ``bmm/``), :class:`DecodeAttnSpec` through
+    the attention keyspace (``attn=...``).  The legacy pairs
+    (``resolve_config``/``resolve_attn_config`` and
+    ``autotune``/``autotune_attn``) remain the implementation -- this
+    wrapper adds **no** key material of its own, so every cache entry
+    and memo bucket is byte-for-byte the one the legacy entrypoint
+    would produce.
+
+    ``search=False`` (default) is the memoised hot path and returns the
+    winning :class:`TuneConfig`; ``search=True`` runs the full search
+    machinery (``refresh=``, ``measure=``, ... via ``**search_kw``) and
+    returns the :class:`TuneResult` with estimates and provenance.
+    """
+    if isinstance(spec, GemmSpec):
+        if search:
+            return autotune(spec.m, spec.n, spec.k, spec.dtype,
+                            backend=backend, cache=cache,
+                            batched=spec.batched, objective=objective,
+                            epilogue=spec.epilogue, **search_kw)
+        if search_kw:
+            raise TypeError(
+                f"search options {sorted(search_kw)} need search=True")
+        return resolve_config(spec.m, spec.n, spec.k, spec.dtype,
+                              backend=backend, cache=cache,
+                              batched=spec.batched, objective=objective,
+                              epilogue=spec.epilogue)
+    if isinstance(spec, DecodeAttnSpec):
+        if search:
+            return autotune_attn(spec.slots, spec.cache_len,
+                                 n_heads=spec.n_heads,
+                                 n_kv_heads=spec.n_kv_heads,
+                                 d_head=spec.d_head, dtype=spec.dtype,
+                                 attn=spec.attn, backend=backend,
+                                 cache=cache, objective=objective,
+                                 **search_kw)
+        if search_kw:
+            raise TypeError(
+                f"search options {sorted(search_kw)} need search=True")
+        return resolve_attn_config(spec.slots, spec.cache_len,
+                                   n_heads=spec.n_heads,
+                                   n_kv_heads=spec.n_kv_heads,
+                                   d_head=spec.d_head, dtype=spec.dtype,
+                                   attn=spec.attn, backend=backend,
+                                   cache=cache, objective=objective)
+    raise TypeError(
+        f"resolve() takes a GemmSpec or DecodeAttnSpec, got "
+        f"{type(spec).__name__}")

@@ -182,21 +182,41 @@ class AttnSpec:
     map.  The tag keys the tuner's cache (``.../attn=paged-p8``): a
     winner adjudicated on strip traffic must never be served to a paged
     caller, whose byte curve scales with occupancy instead of pool size.
+
+    ``share`` is the effective-occupancy term continuous batching adds
+    (DESIGN.md §11): the fraction of logically mapped pages that are
+    *distinct physical* pages once copy-on-write prefix sharing
+    deduplicates them (unique physical / logical mapped).  Shared pages
+    are gathered once per step, not once per slot, so the paged byte
+    curve scales by ``share``.  ``share=1.0`` (no sharing) is the
+    historical behaviour and keeps the tag -- and therefore every
+    existing cache key -- byte-for-byte unchanged.
     """
 
     kind: str = "contig"        # "contig" | "paged"
     page_size: int = 0
+    share: float = 1.0          # unique-physical / logical mapped pages
 
     def __post_init__(self):
         if self.kind not in ("contig", "paged"):
             raise ValueError(f"unknown attention cache kind {self.kind!r}")
         if self.kind == "paged" and self.page_size < 1:
             raise ValueError("paged AttnSpec needs page_size >= 1")
+        if not 0.0 < self.share <= 1.0:
+            raise ValueError(
+                f"share must be in (0, 1], got {self.share!r}")
 
     def tag(self) -> str:
-        """Stable cache-key form, e.g. ``contig`` / ``paged-p8``."""
-        return self.kind if self.kind == "contig" \
-            else f"paged-p{self.page_size}"
+        """Stable cache-key form: ``contig`` / ``paged-p8``; a sharing
+        ratio below 1 appends ``-s<ratio>`` (``paged-p8-s0.62``) so
+        shared-prefix winners never collide with unshared ones, while
+        ``share=1.0`` keys stay byte-for-byte what they always were."""
+        if self.kind == "contig":
+            return self.kind
+        tag = f"paged-p{self.page_size}"
+        if self.share != 1.0:
+            tag += f"-s{self.share:.2f}"
+        return tag
 
 
 def attn_decode_bytes(spec: AttnSpec, *, slots: int, cache_len: int,
@@ -219,6 +239,11 @@ def attn_decode_bytes(spec: AttnSpec, *, slots: int, cache_len: int,
 
     ``lengths``: per-slot live sequence lengths (0 = slot free); default
     assumes every slot full (worst case for the paged layout).
+
+    ``spec.share`` scales the page bytes (not the table reads: every
+    slot still walks its own block table) -- copy-on-write prefix
+    sharing means only the *unique physical* pages move through HBM
+    (DESIGN.md §11).  ``share=1.0`` reproduces the PR-5 curve exactly.
     """
     per_tok = 2.0 * n_kv_heads * d_head * dtype_bytes      # K + V
     if spec.kind == "contig":
@@ -228,7 +253,7 @@ def attn_decode_bytes(spec: AttnSpec, *, slots: int, cache_len: int,
         lengths = [cache_len] * slots
     pages = sum(-(-int(ln) // ps) for ln in lengths if ln > 0)
     table_entries = slots * (-(-cache_len // ps))
-    return pages * ps * per_tok + 4.0 * table_entries
+    return spec.share * pages * ps * per_tok + 4.0 * table_entries
 
 
 def attn_decode_flops(*, slots: int, cache_len: int, lengths=None,

@@ -1,0 +1,363 @@
+"""Continuous batching over the paged pool (DESIGN.md §11): scheduler
+equivalence with the lockstep loop, the chunked-prefill budget bound,
+copy-on-write fork edge cases, refcounted release ordering under
+preemption, prefix-index behaviour with non-aligned tails, the
+ServeConfig / KVLayout / tune.resolve API consolidation, and the
+shared-vs-unshared admission-capacity win the CI gate asserts.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import ServeLoop
+from repro.models import init_decode_state, init_model
+from repro.serve import KVLayout, PageAllocator, ServeConfig, \
+    resolve_layout
+from repro.serve.state import DecodeState
+from tests._hyp import given, settings, st
+
+PROMPTS = [[5, 6, 7, 8, 9], [11, 12, 13], [3, 4, 5, 6, 7, 8, 9],
+           [21, 22, 23, 24, 25, 26], [9, 8, 7, 6], [31, 32]]
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_smoke_config("qwen3_1_7b")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_model(cfg, jax.random.PRNGKey(0))
+
+
+def _run(cfg, params, sc, prompts=None, max_new=4):
+    loop = ServeLoop(cfg, params, sc)
+    for r, p in enumerate(PROMPTS if prompts is None else prompts):
+        loop.submit(r, p)
+    return loop, loop.run(max_new=max_new)
+
+
+# ------------------------------------------------- scheduler equivalence --
+def test_continuous_matches_lockstep_greedy_paged(cfg, params):
+    """The acceptance bar: greedy continuous batching emits byte-identical
+    tokens to the lockstep scheduler for the same arrival trace -- ragged
+    prompts, more requests than slots, chunked prefill mid-decode."""
+    base = ServeConfig(slots=2, cache_len=64, layout=KVLayout.PAGED,
+                      page_size=4)
+    _, lock = _run(cfg, params, base)
+    _, cont = _run(cfg, params,
+                   base.replace(mode="continuous", prefill_budget=4))
+    assert cont == lock
+
+
+def test_continuous_matches_lockstep_greedy_contiguous(cfg, params):
+    base = ServeConfig(slots=2, cache_len=64)
+    _, lock = _run(cfg, params, base)
+    _, cont = _run(cfg, params,
+                   base.replace(mode="continuous", prefill_budget=3))
+    assert cont == lock
+
+
+def test_prefix_sharing_never_changes_tokens(cfg, params):
+    """COW prefix sharing is a memory optimisation: the emitted tokens
+    with sharing on equal the tokens with sharing off."""
+    sc = ServeConfig(slots=2, cache_len=64, layout="paged", page_size=4,
+                     mode="continuous", prefill_budget=4)
+    shared = [1, 2, 3, 4, 5, 6]          # common prefix, ragged tails
+    prompts = [shared + [7, 8], shared + [9], list(shared), shared + [7, 8]]
+    loop_on, out_on = _run(cfg, params, sc, prompts)
+    loop_off, out_off = _run(cfg, params,
+                             sc.replace(prefix_sharing=False), prompts)
+    assert out_on == out_off
+    assert loop_on.alloc.stats["prefix_hits"] > 0
+    assert loop_off.alloc.stats["prefix_hits"] == 0
+    loop_on.alloc.check_invariants()
+
+
+def test_prefill_budget_bound(cfg, params):
+    """No decode step prefills more than ``prefill_budget`` prompt
+    tokens, and long prompts are actually spread over several steps."""
+    budget = 3
+    sc = ServeConfig(slots=2, cache_len=64, layout="paged", page_size=4,
+                     mode="continuous", prefill_budget=budget)
+    loop, out = _run(cfg, params, sc)
+    assert loop.prefill_tokens_per_step, "no prefill steps recorded"
+    assert max(loop.prefill_tokens_per_step) <= budget
+    # a 7-token prompt under a 3-token budget must take >= 3 chunks
+    assert sum(1 for t in loop.prefill_tokens_per_step if t > 0) >= 3
+    assert all(len(out[r]) > len(p) for r, p in enumerate(PROMPTS))
+
+
+# ------------------------------------------------------- COW edge cases --
+def _drive_until_active(loop, steps=64):
+    for _ in range(steps):
+        loop._admit_continuous()
+        loop.prefill_tokens_per_step.append(loop._prefill_step())
+        if loop.active.any():
+            return
+    raise AssertionError("no slot became active")
+
+
+def test_cow_fork_on_first_write_non_aligned_tail(cfg, params):
+    """A cloned slot whose first decode write lands *inside* a shared
+    partial tail page must fork a private copy before writing -- and the
+    two streams must emit the same greedy tokens (identical prompts)."""
+    sc = ServeConfig(slots=2, cache_len=64, layout="paged", page_size=4,
+                     mode="continuous", prefill_budget=16)
+    prompt = [5, 6, 7, 8, 9]             # 5 tokens: page 1 is a partial tail
+    loop = ServeLoop(cfg, params, sc)
+    loop.submit(0, prompt)
+    _drive_until_active(loop)
+    loop._decode_once(max_new=6)         # slot 0 decodes past the prompt
+    loop.submit(1, prompt)               # identical prompt, mid-flight
+    loop._admit_continuous()             # -> whole-table clone, no prefill
+    assert loop.alloc.stats["shared_pages"] > 0
+    assert loop.active.all()
+    before = loop.alloc.stats["cow_forks"]
+    out = loop.run(max_new=6)
+    assert loop.alloc.stats["cow_forks"] > before
+    assert out[1] == out[0]
+    loop.alloc.check_invariants()
+
+
+def test_no_fork_at_page_aligned_boundary(cfg, params):
+    """When the shared prefix ends exactly on a page boundary the first
+    write goes to a *fresh* page -- a fork would be pure waste."""
+    sc = ServeConfig(slots=2, cache_len=64, layout="paged", page_size=4,
+                     mode="continuous", prefill_budget=16)
+    prompt = [5, 6, 7, 8, 9, 10, 11, 12]  # 8 tokens: two full pages
+    loop = ServeLoop(cfg, params, sc)
+    loop.submit(0, prompt)
+    _drive_until_active(loop)
+    loop.submit(1, prompt)
+    loop._admit_continuous()
+    # slot 0 has not decoded yet: its table maps exactly the two full
+    # prompt pages, the clone shares both, and slot 1's first write at
+    # position 8 allocates page 2 privately
+    assert loop.alloc.stats["shared_pages"] == 2
+    out = loop.run(max_new=4)
+    assert loop.alloc.stats["cow_forks"] == 0
+    assert out[1] == out[0]
+    loop.alloc.check_invariants()
+
+
+def test_refcount_release_ordering_under_preemption():
+    """Allocator-level: preemption-style release of a slot sharing prefix
+    pages must only decref -- the survivor keeps its pages -- and the
+    final release ordering returns every page exactly once."""
+    alloc = PageAllocator(16, 4, 3, prefix_sharing=True)
+    prompt = list(range(100, 112))       # 3 full pages
+    alloc.ensure_range(0, len(prompt))
+    alloc.register_prefix(0, prompt)
+    assert alloc.adopt_prefix(1, prompt) == len(prompt)   # live sharing
+    assert alloc.adopt_prefix(2, prompt) == len(prompt)
+    for pid in alloc.slot_pages(0):
+        assert alloc.refcount(pid) == 3
+    alloc.ensure(1, len(prompt))         # slot 1 grows a private page
+    alloc.check_invariants()
+    in_use = alloc.pages_in_use
+    alloc.release(1)                     # "preempt" the sharer: private
+    alloc.check_invariants()             # page freed, shared only decref'd
+    assert alloc.pages_in_use == in_use - 1
+    for pid in alloc.slot_pages(0):
+        assert alloc.refcount(pid) == 2
+    alloc.release(0)
+    for pid in alloc.slot_pages(2):
+        assert alloc.refcount(pid) == 1  # last mapper still holds them
+    alloc.release(2)
+    alloc.check_invariants()
+    assert alloc.pages_in_use == 0
+    # cached prefix pages sit on the reuse pool, not lost
+    assert alloc.free_pages == alloc.num_pages
+
+
+def test_prefix_index_hit_with_non_aligned_tail():
+    """A 10-token prompt over 4-token pages: only the two *full* pages
+    are indexable/adoptable; the partial tail must be private."""
+    alloc = PageAllocator(16, 4, 2, prefix_sharing=True)
+    prompt = list(range(7, 17))          # 10 tokens
+    alloc.ensure_range(0, len(prompt))
+    alloc.register_prefix(0, prompt)
+    assert len(alloc.index) == 2         # full pages only
+    adopted = alloc.adopt_prefix(1, prompt)
+    assert adopted == 8                  # aligned prefix, not the tail
+    assert alloc.slot_pages(1) == alloc.slot_pages(0)[:2]
+    assert alloc.stats["prefix_hits"] == 2
+    alloc.check_invariants()
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 3), st.integers(1, 4), st.integers(0, 3))
+def test_property_shared_prefix_decode_equals_unshared(n_shared_pages,
+                                                       tail_a, tail_b):
+    """Property: for any split into a page-aligned shared prefix and
+    private tails, decoding with prefix sharing on equals sharing off."""
+    cfg = get_smoke_config("qwen3_1_7b")
+    params = _PARAMS_CACHE.setdefault(
+        "p", init_model(cfg, jax.random.PRNGKey(0)))
+    shared = [2 + i for i in range(4 * n_shared_pages)]
+    prompts = [shared + [50 + i for i in range(tail_a)] or [2],
+               shared + [70 + i for i in range(tail_b)] or [2]]
+    sc = ServeConfig(slots=2, cache_len=64, layout="paged", page_size=4,
+                     mode="continuous", prefill_budget=4)
+    loop_on, out_on = _run(cfg, params, sc, prompts, max_new=3)
+    _, out_off = _run(cfg, params, sc.replace(prefix_sharing=False),
+                      prompts, max_new=3)
+    assert out_on == out_off
+    loop_on.alloc.check_invariants()
+
+
+_PARAMS_CACHE: dict = {}
+
+
+# ------------------------------------------------------ API consolidation --
+def test_serveconfig_legacy_kwargs_shim(cfg, params):
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        loop = ServeLoop(cfg, params, slots=2, cache_len=32, paged=True,
+                         page_size=4)
+    assert loop.config == ServeConfig(slots=2, cache_len=32,
+                                      layout=KVLayout.PAGED, page_size=4)
+    assert loop.paged and loop.config.paged
+
+
+def test_serveconfig_rejects_config_plus_legacy(cfg, params):
+    with pytest.raises(TypeError, match="not both"):
+        ServeLoop(cfg, params, ServeConfig(), slots=2)
+
+
+def test_serveloop_rejects_unknown_kwargs(cfg, params):
+    with pytest.raises(TypeError, match="unexpected"):
+        ServeLoop(cfg, params, slotz=2)
+
+
+def test_serveconfig_validation():
+    assert ServeConfig(layout="paged").layout is KVLayout.PAGED
+    with pytest.raises(ValueError, match="mode"):
+        ServeConfig(mode="streaming")
+    with pytest.raises(ValueError, match="prefill_budget"):
+        ServeConfig(prefill_budget=0)
+    assert ServeConfig().replace(slots=7).slots == 7
+
+
+def test_continuous_requires_attention_family(params):
+    ssm = get_smoke_config("mamba2_780m")
+    p = init_model(ssm, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="attention"):
+        ServeLoop(ssm, p, ServeConfig(mode="continuous"))
+
+
+def test_kv_layout_enum_and_paged_bool_deprecation(cfg):
+    state = init_decode_state(cfg, 2, 16, layout=KVLayout.CONTIGUOUS)
+    assert isinstance(state, DecodeState)
+    assert state.layout is KVLayout.CONTIGUOUS
+    with pytest.warns(DeprecationWarning, match="paged"):
+        state = init_decode_state(cfg, 2, 16, paged=True, page_size=4)
+    assert state.layout is KVLayout.PAGED
+    with pytest.raises(ValueError):
+        resolve_layout(KVLayout.CONTIGUOUS, True)    # conflicting spellings
+    assert resolve_layout("paged") is KVLayout.PAGED
+
+
+def test_decode_state_survives_jax_tree_roundtrip(cfg):
+    state = init_decode_state(cfg, 2, 16, layout="paged", page_size=4)
+    mapped = jax.tree.map(lambda x: x, state)
+    assert isinstance(mapped, DecodeState)
+    assert mapped.layout is KVLayout.PAGED
+    assert set(mapped) == set(state)
+
+
+def test_tune_resolve_dispatches_and_preserves_keyspace(tmp_path):
+    from repro.tune import AttnSpec, DecodeAttnSpec, GemmSpec, TuneCache, \
+        resolve, resolve_attn_config, resolve_config
+    cache = TuneCache(str(tmp_path / "tune.json"))
+    new = resolve(GemmSpec(8, 64, 64), backend="cpu", cache=cache)
+    legacy = resolve_config(8, 64, 64, backend="cpu", cache=cache)
+    assert new == legacy
+    spec = DecodeAttnSpec(4, 64, n_heads=4, n_kv_heads=2, d_head=16,
+                          attn=AttnSpec("paged", 8))
+    new_a = resolve(spec, backend="cpu", cache=cache)
+    legacy_a = resolve_attn_config(
+        4, 64, n_heads=4, n_kv_heads=2, d_head=16,
+        attn=AttnSpec("paged", 8), backend="cpu", cache=cache)
+    assert new_a == legacy_a
+    # one cache entry per problem: the unified entrypoint hit the very
+    # keys the legacy entrypoints wrote (no new key material)
+    keys = list(cache.keys())
+    assert len(keys) == 2
+    assert any("/attn=paged-p8" in k for k in keys)
+    with pytest.raises(TypeError, match="search=True"):
+        resolve(GemmSpec(8, 64, 64), refresh=True)
+    with pytest.raises(TypeError, match="GemmSpec"):
+        resolve(object())
+
+
+def test_attn_spec_share_term():
+    from repro.tune.cost import AttnSpec, attn_decode_bytes
+    base = AttnSpec("paged", 8)
+    assert base.tag() == "paged-p8"              # share=1: key unchanged
+    half = AttnSpec("paged", 8, share=0.5)
+    assert half.tag() == "paged-p8-s0.50"
+    kw = dict(slots=4, cache_len=64, lengths=[32, 32, 0, 0],
+              n_kv_heads=2, d_head=16, dtype_bytes=2)
+    b1 = attn_decode_bytes(base, **kw)
+    b2 = attn_decode_bytes(half, **kw)
+    table = 4.0 * 4 * 8                          # table reads don't scale
+    assert b2 - table == pytest.approx((b1 - table) * 0.5)
+    with pytest.raises(ValueError, match="share"):
+        AttnSpec("paged", 8, share=0.0)
+    with pytest.raises(ValueError, match="share"):
+        AttnSpec("paged", 8, share=1.5)
+
+
+def test_build_serve_step_layout_param(cfg):
+    from repro.launch.steps import abstract_decode_state
+    with pytest.warns(DeprecationWarning, match="paged"):
+        abs_paged = abstract_decode_state(cfg, 2, 32, paged=True,
+                                          page_size=4)
+    assert abs_paged.layout is KVLayout.PAGED
+    abs_new = abstract_decode_state(cfg, 2, 32, layout=KVLayout.PAGED,
+                                    page_size=4)
+    assert set(abs_new) == set(abs_paged)
+
+
+# --------------------------------------------------- capacity (CI mirror) --
+def shared_admission_capacity(num_pages: int, page_size: int, slots: int,
+                              prompts, *, prefix_sharing: bool) -> int:
+    """How many of ``prompts`` fit in the pool simultaneously -- the
+    allocator-level admission model the CI gate and the prefix-sharing
+    benchmark both run (admit until PoolExhausted / pool pressure)."""
+    from repro.serve.paged_kv import PoolExhausted, pages_needed
+    alloc = PageAllocator(num_pages, page_size, slots,
+                          prefix_sharing=prefix_sharing)
+    admitted = 0
+    for slot, prompt in enumerate(prompts[:slots]):
+        need = pages_needed(len(prompt), page_size)
+        adopted = alloc.adopt_prefix(slot, prompt) if prefix_sharing else 0
+        try:
+            alloc.ensure_range(slot, len(prompt))
+        except PoolExhausted:
+            break
+        if adopted < len(prompt) and prefix_sharing:
+            alloc.register_prefix(slot, prompt)
+        admitted += 1
+        assert need >= 0
+    alloc.check_invariants()
+    return admitted
+
+
+def test_shared_prefix_admission_fits_2x_slots():
+    """The CI assertion: at a 75%-common-prefix trace, prefix sharing
+    admits >= 2x the simultaneous sequences of the unshared pool."""
+    page_size, slots, num_pages = 4, 16, 24
+    shared = list(range(100, 124))               # 24 tokens = 6 pages
+    prompts = [shared + [200 + 8 * i + j for j in range(8)]  # 8-token tails
+               for i in range(slots)]            # 75% of each prompt shared
+    base = shared_admission_capacity(num_pages, page_size, slots, prompts,
+                                     prefix_sharing=False)
+    cow = shared_admission_capacity(num_pages, page_size, slots, prompts,
+                                    prefix_sharing=True)
+    assert cow >= 2 * base, (cow, base)
