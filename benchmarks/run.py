@@ -29,8 +29,10 @@ import time
 # BENCH_<git_sha>.json default artifact path; 4 adds the paged-KV rows
 # (bench_paged_kv: paged vs contiguous decode time/bytes/J per occupancy);
 # 5 adds the prefix-sharing rows (bench_prefix_sharing: shared-vs-unshared
-# admission capacity, share-scaled bytes, continuous-serve wall time)
-SCHEMA_VERSION = 5
+# admission capacity, share-scaled bytes, continuous-serve wall time);
+# 6 adds the observability rows (bench_obs_overhead: instrument micro
+# costs + enabled-vs-disabled serve-step overhead, asserted < 5% in CI)
+SCHEMA_VERSION = 6
 
 MODULES = [
     "bench_exec_time",        # Table IV
@@ -48,6 +50,7 @@ MODULES = [
     "bench_fused_epilogue",   # DESIGN.md §9: fused vs unfused epilogue
     "bench_paged_kv",         # DESIGN.md §10: paged vs contiguous decode
     "bench_prefix_sharing",   # DESIGN.md §11: COW prefix-sharing capacity
+    "bench_obs_overhead",     # DESIGN.md §12: metrics/span layer overhead
 ]
 
 

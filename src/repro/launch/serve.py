@@ -45,6 +45,8 @@ from repro.launch.steps import _engine_for
 from repro.models import DotEngine, decode_step, \
     fused_epilogue_savings_bytes, init_decode_state, init_model
 from repro.models.transformer import prefill_kv_chunk
+from repro.obs import MetricsRegistry, Tracer, default_registry, \
+    default_tracer, null_registry
 from repro.power import EnergyMeter, EnergyReport, WorkloadHints, \
     detect_backend
 from repro.serve import KVLayout, ServeConfig
@@ -60,6 +62,8 @@ _LEGACY_KW = {"slots", "cache_len", "temperature", "eos_id", "seed",
 class ServeLoop:
     def __init__(self, cfg, params, config: ServeConfig | None = None, *,
                  engine: DotEngine | None = None, power_backend=None,
+                 metrics: MetricsRegistry | None = None,
+                 tracer: Tracer | None = None,
                  **legacy):
         if legacy:
             bad = set(legacy) - _LEGACY_KW
@@ -124,8 +128,7 @@ class ServeLoop:
         # operating points; the report carries each.
         self.f_scales = {"proj": 1.0, "mlp": 1.0, "attn": 1.0}
         if sc.objective:
-            from repro.tune import DecodeAttnSpec, EpilogueSpec, GemmSpec, \
-                resolve
+            from repro.tune import EpilogueSpec, GemmSpec, resolve
             # same dtype AND epilogue the engine's GEMMs resolve under
             # (bucket match): the decode step's projection executes with
             # a fused residual (.../ep=res), the MLP up-projection with a
@@ -142,13 +145,7 @@ class ServeLoop:
                          epilogue=EpilogueSpec(activation="silu")),
                 objective=sc.objective).f_scale
             if cfg.has_attention:
-                self.f_scales["attn"] = resolve(
-                    DecodeAttnSpec(sc.slots, sc.cache_len,
-                                   n_heads=cfg.n_heads,
-                                   n_kv_heads=cfg.n_kv_heads,
-                                   d_head=cfg.d_head, dtype=cfg.act_dtype,
-                                   attn=self.attn_spec),
-                    objective=sc.objective).f_scale
+                self.f_scales["attn"] = self._resolve_attn_f()
         # the dominant projection's point keeps the historical scalar
         self.f_scale = self.f_scales["proj"]
         self.temperature = sc.temperature
@@ -189,8 +186,10 @@ class ServeLoop:
         # per-step prompt tokens actually prefilled (budget telemetry:
         # every entry is <= prefill_budget by construction, tested)
         self.prefill_tokens_per_step: list[int] = []
-        # energy telemetry: one reading per decode step, J split evenly
-        # across the slots that were active in it (per-request accounting)
+        # energy telemetry: one reading per prefill / prefill-chunk /
+        # decode step, attributed to requests weighted by the tokens
+        # each processed in it (a decode step is one token per live
+        # slot, so its split is even; a shared prefill chunk is not)
         self.power = power_backend or detect_backend()
         # fused epilogues (DESIGN.md §9): modeled HBM bytes one decode
         # step over the full slot pool no longer moves
@@ -219,6 +218,39 @@ class ServeLoop:
                                          "fused_epilogue_saved_bytes_step":
                                          self.ep_saved_step})
         self.request_joules: dict[int, float] = {}
+        # --- observability (DESIGN.md §12) ---------------------------------
+        # metrics default to the process registry (null when sc.obs is
+        # off: every instrument becomes a shared no-op); the tracer
+        # defaults to the process tracer, which is disabled until a
+        # driver installs one (set_default_tracer / --trace), so span
+        # recording costs nothing unless somebody asked for a trace.
+        self._bind_obs(
+            metrics if metrics is not None else (
+                default_registry() if sc.obs else null_registry()),
+            tracer if tracer is not None else (
+                default_tracer() if sc.obs else Tracer(enabled=False)))
+        # request lifecycle on the time.monotonic clock (seconds; trace
+        # timestamps are the same clock in us): arrival at submit,
+        # first decoded token, retirement -- TTFT/TPOT/e2e and SLO
+        # attainment derive from these (ROADMAP SLO item)
+        self.arrival_s: dict[int, float] = {}
+        self.first_token_s: dict[int, float] = {}
+        self.finish_s: dict[int, float] = {}
+        self.request_ttft_ms: dict[int, float] = {}
+        self.request_tpot_ms: dict[int, float] = {}
+        self.request_e2e_ms: dict[int, float] = {}
+        self.request_slo_ok: dict[int, bool] = {}
+        # current lifecycle phase per request (queued/prefill/decode):
+        # keeps the async phase spans balanced across preemption, which
+        # bounces a request back to queued mid-decode
+        self._req_phase: dict[int, str | None] = {}
+        # live-share tuner feedback (satellite of DESIGN.md §12): the
+        # lowest observed COW sharing ratio, and the 0.01-quantized tag
+        # the attention winner was last resolved under
+        self._min_share = 1.0
+        self._share_tag: str | None = None
+        self._revived_seen = 0
+        self.g_share.set(1.0)
         self._tok_flops = 2.0 * sum(
             int(p.size) for p in jax.tree.leaves(params))
         self._step = jax.jit(
@@ -227,6 +259,156 @@ class ServeLoop:
         self._chunk = jax.jit(
             lambda p, s, t, sl, st, ln: prefill_kv_chunk(
                 p, cfg, s, t, sl, st, ln, self.engine))
+
+    # ------------------------------------------------------------- obs ----
+    def _bind_obs(self, metrics: MetricsRegistry, tracer: Tracer) -> None:
+        """Bind the metrics registry + tracer and hand out this loop's
+        instruments.  Constructor path; ``bench_obs_overhead`` rebinds
+        at runtime to measure the enabled-vs-disabled delta on a single
+        loop (one jit cache, one allocator, no cross-instance skew)."""
+        self.metrics = m = metrics
+        self.tracer = tracer
+        self.m_ttft = m.histogram("serve.ttft_ms")
+        self.m_tpot = m.histogram("serve.tpot_ms")
+        self.m_e2e = m.histogram("serve.e2e_ms")
+        self.m_step = m.histogram("serve.step_ms")
+        self.m_prefill_tok = m.histogram("serve.prefill_tokens")
+        self.c_submitted = m.counter("serve.requests.submitted")
+        self.c_finished = m.counter("serve.requests.finished")
+        self.c_preempt = m.counter("serve.preemptions")
+        self.c_cow = m.counter("serve.cow_forks")
+        self.c_scrubbed = m.counter("serve.pages.scrubbed")
+        self.c_revived = m.counter("serve.pages.revived")
+        self.c_slo_met = m.counter("serve.slo.met")
+        self.c_slo_violation = m.counter("serve.slo.violations")
+        self.g_queue = m.gauge("serve.queue.depth")
+        self.g_occ = m.gauge("serve.pool.occupancy")
+        self.g_hit_ratio = m.gauge("serve.prefix.hit_ratio")
+        self.g_share = m.gauge("serve.attn.min_share")
+
+    # -------------------------------------------------- tuner feedback ----
+    def _resolve_attn_f(self, share: float = 1.0) -> float:
+        """DVFS point of the decode-attention winner under the layout the
+        kernel actually runs.  ``share`` < 1 resolves under the live COW
+        sharing keyspace (``.../attn=paged-p8-sX.XX``, DESIGN.md §11) so
+        the winner's byte curve matches the gathered-once traffic;
+        share=1 -- no sharing telemetry yet -- keeps the historical key."""
+        from repro.tune import DecodeAttnSpec, resolve
+        spec = self.attn_spec
+        if share < 0.995:
+            spec = dataclasses.replace(
+                spec, share=max(0.01, round(share, 2)))
+        return resolve(
+            DecodeAttnSpec(self.slots, self.cache_len,
+                           n_heads=self.cfg.n_heads,
+                           n_kv_heads=self.cfg.n_kv_heads,
+                           d_head=self.cfg.d_head,
+                           dtype=self.cfg.act_dtype, attn=spec),
+            objective=self.config.objective).f_scale
+
+    def _observe_share(self, share: float) -> None:
+        """Feed the live sharing ratio back into telemetry and, when it
+        crosses into a new 0.01-quantized bucket, re-resolve the
+        decode-attention winner under that keyspace (ROADMAP item: the
+        loop now *reports and retunes* on observed share, rather than
+        resolving once under the share=1 fallback)."""
+        if share >= self._min_share:
+            return
+        self._min_share = share
+        self.g_share.set(share)
+        tag = f"{max(0.01, round(share, 2)):.2f}"
+        if self.config.objective and tag != self._share_tag \
+                and self.cfg.has_attention:
+            self._share_tag = tag
+            self.f_scales["attn"] = self._resolve_attn_f(share)
+            self.energy.meta["f_scale_per_shape"] = dict(self.f_scales)
+
+    # ---------------------------------------------- lifecycle accounting --
+    def _set_phase(self, req_id: int, phase: str | None) -> None:
+        """Move a request between lifecycle phases, keeping one async
+        span (``request.<phase>``) open per request at all times --
+        begin/end stay balanced even when preemption bounces a request
+        from decode back to queued."""
+        prev = self._req_phase.get(req_id)
+        if prev:
+            self.tracer.end_async(f"request.{prev}", req_id)
+        self._req_phase[req_id] = phase
+        if phase:
+            self.tracer.begin_async(f"request.{phase}", req_id)
+
+    def _finish_request(self, req_id: int) -> None:
+        """Retirement accounting: TTFT / TPOT / e2e histograms, SLO
+        attainment against ``config.latency_slo_ms`` (TTFT target), and
+        the request's enclosing async span closed with its totals."""
+        now = time.monotonic()
+        self.finish_s[req_id] = now
+        self.c_finished.inc()
+        arr = self.arrival_s.get(req_id)
+        first = self.first_token_s.get(req_id)
+        n_out = self.request_emitted.get(req_id, 0)
+        ttft = tpot = None
+        if arr is not None and first is not None:
+            ttft = (first - arr) * 1e3
+            self.request_ttft_ms[req_id] = ttft
+            self.m_ttft.observe(ttft)
+            e2e = (now - arr) * 1e3
+            self.request_e2e_ms[req_id] = e2e
+            self.m_e2e.observe(e2e)
+        if first is not None and n_out > 1:
+            tpot = (now - first) * 1e3 / (n_out - 1)
+            self.request_tpot_ms[req_id] = tpot
+            self.m_tpot.observe(tpot)
+        slo = self.config.latency_slo_ms
+        slo_ok = None
+        if slo is not None and ttft is not None:
+            slo_ok = bool(ttft <= slo)
+            self.request_slo_ok[req_id] = slo_ok
+            (self.c_slo_met if slo_ok else self.c_slo_violation).inc()
+        self._set_phase(req_id, None)
+        self.tracer.end_async(
+            "request", req_id, tokens=n_out,
+            joules=self.request_joules.get(req_id, 0.0),
+            ttft_ms=ttft, tpot_ms=tpot, slo_ok=slo_ok)
+
+    def _pump_gauges(self) -> None:
+        """Per-step gauge refresh: queue depth, page-pool occupancy,
+        prefix-index hit ratio, plus the scrubbed-vs-revived page reuse
+        counters (revived pages skip the zeroing scrub -- the delta here
+        tracks how often the cached FIFO pays off, DESIGN.md §11)."""
+        self.g_queue.set(len(self.queue))
+        if self.paged:
+            st = self.alloc.stats
+            used = self.alloc.num_pages - self.alloc.free_pages
+            self.g_occ.set(used / max(self.alloc.num_pages, 1))
+            hits = st.get("prefix_hits", 0)
+            self.g_hit_ratio.set(
+                hits / max(hits + st.get("allocated", 0), 1))
+            rev = st.get("revived", 0) - self._revived_seen
+            if rev:
+                self.c_revived.inc(rev)
+                self._revived_seen = st.get("revived", 0)
+
+    def latency_summary(self) -> dict:
+        """Exact percentiles over the raw per-request latency lists (the
+        serve histograms carry the same data bucketed; this summary is
+        what the CLI prints and the energy report embeds)."""
+        def pct(vals: list[float]) -> dict:
+            if not vals:
+                return {"count": 0}
+            a = np.asarray(sorted(vals), np.float64)
+            return {"count": len(vals),
+                    "p50": float(np.percentile(a, 50)),
+                    "p95": float(np.percentile(a, 95)),
+                    "p99": float(np.percentile(a, 99)),
+                    "mean": float(a.mean()), "max": float(a.max())}
+        met = sum(1 for ok in self.request_slo_ok.values() if ok)
+        total = len(self.request_slo_ok)
+        return {"ttft_ms": pct(list(self.request_ttft_ms.values())),
+                "tpot_ms": pct(list(self.request_tpot_ms.values())),
+                "e2e_ms": pct(list(self.request_e2e_ms.values())),
+                "slo": {"target_ms": self.config.latency_slo_ms,
+                        "met": met, "violations": total - met,
+                        "attainment": met / total if total else None}}
 
     # ------------------------------------------------------ paged helpers --
     def _attn_share(self) -> float:
@@ -261,6 +443,7 @@ class ServeLoop:
                 spec = dataclasses.replace(spec, share=share)
                 self.energy.meta["attn_share"] = min(
                     self.energy.meta.get("attn_share", 1.0), share)
+                self._observe_share(share)
         return self.cfg.n_layers * attn_decode_bytes(
             spec, slots=self.slots, cache_len=self.cache_len,
             lengths=lengths, n_kv_heads=self.cfg.n_kv_heads,
@@ -276,9 +459,10 @@ class ServeLoop:
         (COW forks skip this: the fork's device copy overwrites every
         row; adopted prefix pages skip it too: their content IS the
         requested prefix.)"""
-        rows = [int(r) for pid in page_ids if self.alloc.was_freed(pid)
-                for r in self._perm_np[:, pid]]
+        dirty = [pid for pid in page_ids if self.alloc.was_freed(pid)]
+        rows = [int(r) for pid in dirty for r in self._perm_np[:, pid]]
         if rows:
+            self.c_scrubbed.inc(len(dirty))
             idx = jnp.asarray(rows)
             self.state["k_pages"] = self.state["k_pages"].at[idx].set(0)
             self.state["v_pages"] = self.state["v_pages"].at[idx].set(0)
@@ -309,6 +493,7 @@ class ServeLoop:
                     self.state["k_pages"][src])
                 self.state["v_pages"] = self.state["v_pages"].at[dst].set(
                     self.state["v_pages"][src])
+                self.c_cow.inc()
                 forked = True
                 break
         return forked
@@ -337,11 +522,27 @@ class ServeLoop:
         self.alloc.release(victim)
         self._sync_tables()
         self.preemptions += 1
+        self.c_preempt.inc()
+        self.tracer.instant("serve.preempt", req=req, needer=needer)
+        self._set_phase(req, "queued")
         return True
 
     # -------------------------------------------------------- scheduling --
-    def submit(self, req_id: int, prompt: list[int]):
+    def submit(self, req_id: int, prompt: list[int],
+               arrival_ts: float | None = None):
+        """Queue a request.  ``arrival_ts`` is its arrival on the
+        ``time.monotonic`` clock in seconds (default: now) -- TTFT, e2e
+        latency and SLO attainment are accounted from it, so a driver
+        replaying a recorded arrival trace passes the recorded stamps."""
+        t = time.monotonic() if arrival_ts is None else float(arrival_ts)
+        self.arrival_s[req_id] = t
         self.queue.append((req_id, list(prompt)))
+        self.c_submitted.inc()
+        self.tracer.begin_async("request", req_id, ts=t * 1e6,
+                                prompt_tokens=len(prompt))
+        self._req_phase[req_id] = None
+        self.tracer.begin_async("request.queued", req_id, ts=t * 1e6)
+        self._req_phase[req_id] = "queued"
 
     def _admit(self):
         """Lockstep admission: whole-prompt prefill at admission time
@@ -369,20 +570,38 @@ class ServeLoop:
                     # by any per-slot cache_len)
                     break
             self.queue.pop(0)
+            self._set_phase(req_id, "prefill")
             if self.paged:
                 self._scrub_pages(self.alloc.ensure_range(slot, len(prompt)))
                 self._sync_tables()
-            # prefill the prompt token-by-token into this slot's cache row
+            # prefill the prompt token-by-token into this slot's cache
+            # row, metered as one "prefill" reading whose joules all
+            # belong to this request (lockstep prefill is single-request
+            # work -- continuous chunks split by tokens instead)
             mask = np.zeros(self.slots, bool)
             mask[slot] = True  # slot-isolated prefill writes
-            for i, tok in enumerate(prompt):
-                toks = np.zeros((self.slots, 1), np.int32)
-                toks[slot, 0] = tok
-                logits, self.state = self._step(
-                    self.params, self.state, jnp.asarray(toks),
-                    jnp.asarray(i, jnp.int32), jnp.asarray(mask))
+            with self.tracer.span("serve.prefill", req=req_id,
+                                  tokens=len(prompt)), \
+                    EnergyMeter("prefill", backend=self.power,
+                                reporter=self.energy,
+                                hints=WorkloadHints(
+                                    flops=self._tok_flops * len(prompt),
+                                    hbm_bytes=self._gemm_bytes_step
+                                    * len(prompt),
+                                    gemm_bytes=self._gemm_bytes_step
+                                    * len(prompt),
+                                    f_scale=self.f_scale)) as em:
+                for i, tok in enumerate(prompt):
+                    toks = np.zeros((self.slots, 1), np.int32)
+                    toks[slot, 0] = tok
+                    logits, self.state = self._step(
+                        self.params, self.state, jnp.asarray(toks),
+                        jnp.asarray(i, jnp.int32), jnp.asarray(mask))
+            self.request_joules[req_id] = \
+                self.request_joules.get(req_id, 0.0) + em.reading.joules
             self.pos[slot] = len(prompt)
             self.active[slot] = True
+            self._set_phase(req_id, "decode")
             self.slot_req[slot] = req_id
             self._slot_prompt[slot] = list(prompt)
             self.out[req_id] = list(prompt)
@@ -437,6 +656,7 @@ class ServeLoop:
                 if want > self.alloc.free_pages:
                     break
             self.queue.pop(0)
+            self._set_phase(req_id, "prefill")
             self.slot_req[slot] = req_id
             self._slot_prompt[slot] = list(prompt)
             self.out[req_id] = list(prompt)
@@ -451,6 +671,7 @@ class ServeLoop:
                 self._sync_tables()
                 self.pos[slot] = len(prompt)
                 self.active[slot] = True
+                self._set_phase(req_id, "decode")
                 continue
             adopted = self.alloc.adopt_prefix(slot, prompt) \
                 if self.prefix_sharing else 0
@@ -460,6 +681,7 @@ class ServeLoop:
                 # page-aligned prompt fully served from the index
                 self.pos[slot] = len(prompt)
                 self.active[slot] = True
+                self._set_phase(req_id, "decode")
             else:
                 self._prefill_len[slot] = len(prompt)
                 self._prefill_done[slot] = adopted
@@ -523,9 +745,24 @@ class ServeLoop:
                      if s not in {r[0] for r in rows})
         for i in range(len(rows), self.slots):
             sl[i] = next(spare)
-        self.state = self._chunk(self.params, self.state,
-                                 jnp.asarray(toks), jnp.asarray(sl),
-                                 jnp.asarray(st), jnp.asarray(ln))
+        total = sum(t for _, _, t in rows)
+        with EnergyMeter("prefill-chunk", backend=self.power,
+                         reporter=self.energy,
+                         hints=WorkloadHints(
+                             flops=self._tok_flops * total,
+                             hbm_bytes=self._gemm_bytes_step,
+                             gemm_bytes=self._gemm_bytes_step,
+                             f_scale=self.f_scale)) as em:
+            self.state = self._chunk(self.params, self.state,
+                                     jnp.asarray(toks), jnp.asarray(sl),
+                                     jnp.asarray(st), jnp.asarray(ln))
+        # per-request attribution weighted by the prompt tokens each row
+        # actually processed this chunk -- a gang sharing one reading
+        # must not bill a 1-token tail row like a budget-filling row
+        for s, done, take in rows:
+            r = self.slot_req[s]
+            self.request_joules[r] = self.request_joules.get(r, 0.0) \
+                + em.reading.joules * take / total
         for s, done, take in rows:
             self._prefill_done[s] = done + take
             if self._prefill_done[s] >= self._prefill_len[s]:
@@ -539,7 +776,8 @@ class ServeLoop:
                 self._prefill_done[s] = 0
                 self.pos[s] = len(self._slot_prompt[s])
                 self.active[s] = True
-        return sum(t for _, _, t in rows)
+                self._set_phase(self.slot_req[s], "decode")
+        return total
 
     def _sample(self, logits_row) -> int:
         if self.temperature <= 0:
@@ -604,12 +842,16 @@ class ServeLoop:
                 self.params, self.state, jnp.asarray(toks), pos_arg,
                 jnp.asarray(self.active))
             logits = np.asarray(logits[:, 0], np.float32)
+        # token-weighted attribution degenerates to an even split here:
+        # every active slot processed exactly one token this step
+        # (prefill readings are weighted by their real token counts)
         j_per_req = em.reading.joules / max(n_active, 1)
         for s in range(self.slots):
             if self.active[s]:
                 r = self.slot_req[s]
                 self.request_joules[r] = \
                     self.request_joules.get(r, 0.0) + j_per_req
+        t_tok = time.monotonic()
         for s in range(self.slots):
             if not self.active[s]:
                 continue
@@ -617,11 +859,14 @@ class ServeLoop:
             r = self.slot_req[s]
             self.out[r].append(tok)
             self.request_emitted[r] += 1
+            if r not in self.first_token_s:
+                self.first_token_s[r] = t_tok   # TTFT numerator
             self.pos[s] = (self.pos[s] + 1) if self._vector_pos \
                 else scalar_pos + 1
             if tok == self.eos_id or self.request_emitted[r] >= max_new:
                 self.active[s] = False
                 self._slot_prompt[s] = None
+                self._finish_request(r)
                 if self.paged:
                     # copy-free eviction: the slot drops its references;
                     # pages go back on a free pool only at refcount zero
@@ -632,20 +877,40 @@ class ServeLoop:
 
     def run(self, max_new: int = 32) -> dict[int, list[int]]:
         """Decode until queue + slots drain (or max_new per request,
-        tracked per request so a preempted sequence resumes its budget)."""
+        tracked per request so a preempted sequence resumes its budget).
+        Each scheduler iteration runs under a ``serve.step`` span with
+        admit/prefill/decode children, feeds the step-latency histogram
+        and refreshes the occupancy gauges (DESIGN.md §12)."""
+        tr = self.tracer
         if self.mode == "continuous":
             while (self.queue or self.active.any()
                    or (self._prefill_len >= 0).any()):
-                self._admit_continuous()
-                self.prefill_tokens_per_step.append(self._prefill_step())
-                if self.active.any():
-                    self._decode_once(max_new)
-            return self.out
-        while self.queue or self.active.any():
-            self._admit()
-            if not self.active.any():
-                continue
-            self._decode_once(max_new)
+                t0 = time.perf_counter()
+                with tr.span("serve.step", mode="continuous"):
+                    with tr.span("serve.admit"):
+                        self._admit_continuous()
+                    with tr.span("serve.prefill_chunk"):
+                        n = self._prefill_step()
+                    self.prefill_tokens_per_step.append(n)
+                    if n:
+                        self.m_prefill_tok.observe(n)
+                    if self.active.any():
+                        with tr.span("serve.decode"):
+                            self._decode_once(max_new)
+                self.m_step.observe((time.perf_counter() - t0) * 1e3)
+                self._pump_gauges()
+        else:
+            while self.queue or self.active.any():
+                t0 = time.perf_counter()
+                with tr.span("serve.step", mode="lockstep"):
+                    with tr.span("serve.admit"):
+                        self._admit()
+                    if self.active.any():
+                        with tr.span("serve.decode"):
+                            self._decode_once(max_new)
+                self.m_step.observe((time.perf_counter() - t0) * 1e3)
+                self._pump_gauges()
+        self.energy.meta["latency"] = self.latency_summary()
         return self.out
 
 
@@ -687,6 +952,20 @@ def main(argv=None):
                     help="pin the energy telemetry backend (default: auto)")
     ap.add_argument("--energy-report", default=None, metavar="PATH",
                     help="write the per-step energy report JSON here")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="time-to-first-token SLO target in ms; per-"
+                         "request attainment is accounted and summarised "
+                         "(DESIGN.md §12)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the span trace as JSONL here (convert / "
+                         "validate with python -m repro.obs.trace, load "
+                         "the converted JSON in Perfetto)")
+    ap.add_argument("--metrics-report", default=None, metavar="PATH",
+                    help="write the metrics registry snapshot JSON here")
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable the metrics + span layer entirely "
+                         "(the near-zero-overhead baseline "
+                         "bench_obs_overhead measures against)")
     ap.add_argument("--objective", default=None,
                     choices=["time", "energy", "edp"],
                     help="route every GEMM through the autotuner "
@@ -704,10 +983,19 @@ def main(argv=None):
         objective=args.objective, layout=layout,
         page_size=args.page_size, num_pages=args.num_pages,
         mode=args.mode, prefill_budget=args.prefill_budget,
-        prefix_sharing=not args.no_prefix_sharing)
+        prefix_sharing=not args.no_prefix_sharing,
+        latency_slo_ms=args.slo_ms, obs=not args.no_obs)
+    tracer = None
+    if args.trace and not args.no_obs:
+        from repro.obs import set_default_tracer
+        # installed as the process default so spans opened below the
+        # loop (tuner resolution, energy attribution) land in it too
+        tracer = Tracer(enabled=True)
+        set_default_tracer(tracer)
     params = init_model(cfg, jax.random.PRNGKey(args.seed))
     loop = ServeLoop(cfg, params, serve_cfg,
-                     power_backend=detect_backend(args.power_backend))
+                     power_backend=detect_backend(args.power_backend),
+                     tracer=tracer)
     rng = np.random.default_rng(args.seed)
     for r in range(args.requests):
         prompt = rng.integers(2, cfg.vocab, size=args.prompt_len).tolist()
@@ -751,9 +1039,32 @@ def main(argv=None):
         print(f"  req {r}: {toks[:args.prompt_len]} -> "
               f"{toks[args.prompt_len:][:8]}... "
               f"({loop.request_joules.get(r, 0.0):.2f} J)")
+    lat = loop.energy.meta.get("latency") or {}
+    ttft, tpot = lat.get("ttft_ms", {}), lat.get("tpot_ms", {})
+    if ttft.get("count"):
+        print(f"[serve] latency: TTFT p50 {ttft['p50']:.1f} / "
+              f"p95 {ttft['p95']:.1f} / p99 {ttft['p99']:.1f} ms"
+              + (f", TPOT p50 {tpot['p50']:.2f} / p95 {tpot['p95']:.2f} "
+                 f"/ p99 {tpot['p99']:.2f} ms/token"
+                 if tpot.get("count") else ""))
+    slo = lat.get("slo", {})
+    if slo.get("target_ms") is not None:
+        n = slo["met"] + slo["violations"]
+        print(f"[serve] SLO (TTFT <= {slo['target_ms']:g} ms): "
+              f"{slo['met']}/{n} met "
+              f"({(slo['attainment'] or 0.0) * 100:.0f}% attainment), "
+              f"{slo['violations']} violations")
     if args.energy_report:
         loop.energy.write(args.energy_report)
         print(f"[serve] wrote energy report to {args.energy_report}")
+    if args.metrics_report:
+        loop.metrics.write(args.metrics_report)
+        print(f"[serve] wrote metrics snapshot to {args.metrics_report}")
+    if args.trace and tracer is not None:
+        tracer.write_jsonl(args.trace)
+        print(f"[serve] wrote {len(tracer.events)} trace events to "
+              f"{args.trace} (python -m repro.obs.trace {args.trace} "
+              f"-o trace.json for Perfetto)")
     return out
 
 

@@ -30,6 +30,7 @@ from repro.distributed.ctx import dp_axes, mesh_context
 from repro.models import DotEngine, SHAPES, decode_inputs, forward, \
     init_decode_state, init_model, input_specs, loss_fn
 from repro.models.transformer import decode_step as model_decode_step
+from repro.obs import trace_span
 from repro.optim import AdamWConfig, adamw_update
 from repro.optim.compress import ef_compress
 from repro.serve.state import DecodeState, resolve_layout
@@ -180,6 +181,17 @@ def build_train_step(cfg, mesh, shape_name: str, *,
                      engine: DotEngine | None = None,
                      objective: str | None = None):
     """Returns (jitted_fn, (params_shd, opt_shd, batch_shd), abstract_args)."""
+    # builder spans (DESIGN.md §12): construction/tuner-resolution cost
+    # shows up in the trace next to the steps it feeds
+    with trace_span("steps.build_train_step", shape=shape_name,
+                    objective=objective):
+        return _build_train_step(
+            cfg, mesh, shape_name, opt_cfg=opt_cfg, grad_accum=grad_accum,
+            pod_compress=pod_compress, engine=engine, objective=objective)
+
+
+def _build_train_step(cfg, mesh, shape_name, *, opt_cfg, grad_accum,
+                      pod_compress, engine, objective):
     opt_cfg = opt_cfg or AdamWConfig()
     spec = SHAPES[shape_name]
     step = make_train_step(cfg, mesh, opt_cfg, grad_accum=grad_accum,
@@ -220,6 +232,13 @@ def build_prefill_step(cfg, mesh, shape_name: str, *,
                        engine: DotEngine | None = None,
                        objective: str | None = None):
     """Forward-only (inference prefill) step: batch -> logits."""
+    with trace_span("steps.build_prefill_step", shape=shape_name,
+                    objective=objective):
+        return _build_prefill_step(cfg, mesh, shape_name, engine=engine,
+                                   objective=objective)
+
+
+def _build_prefill_step(cfg, mesh, shape_name, *, engine, objective):
     engine = _engine_for(engine, objective)
     spec = SHAPES[shape_name]
     icfg = dataclasses.replace(cfg, remat=False)  # no grads -> no remat
@@ -283,6 +302,16 @@ def build_serve_step(cfg, mesh, shape_name: str, *,
     ``cache_len`` regardless of live sequences.  The ``paged`` bool is
     the deprecated spelling (DESIGN.md §11).
     """
+    with trace_span("steps.build_serve_step", shape=shape_name,
+                    objective=objective):
+        return _build_serve_step(
+            cfg, mesh, shape_name, engine=engine, cache_len=cache_len,
+            objective=objective, layout=layout, paged=paged,
+            page_size=page_size)
+
+
+def _build_serve_step(cfg, mesh, shape_name, *, engine, cache_len,
+                      objective, layout, paged, page_size):
     layout = resolve_layout(layout, paged)
     spec = SHAPES[shape_name]
     b = spec.global_batch

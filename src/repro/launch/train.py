@@ -23,6 +23,8 @@ from repro.data import PackedSyntheticData, PrefetchLoader
 from repro.launch.steps import build_train_step
 from repro.models import fused_epilogue_savings_bytes, init_model
 from repro.models.config import ShapeSpec
+from repro.obs import Tracer, default_registry, null_registry, \
+    set_default_tracer, trace_span
 from repro.optim import AdamWConfig
 from repro.optim.adamw import init_opt_state
 from repro.power import EnergyMeter, EnergyReport, WorkloadHints, \
@@ -54,11 +56,28 @@ def main(argv=None):
                     help="pin the energy telemetry backend (default: auto)")
     ap.add_argument("--energy-report", default=None, metavar="PATH",
                     help="write the per-step energy report JSON here")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the span trace as JSONL here (convert / "
+                         "validate with python -m repro.obs.trace)")
+    ap.add_argument("--metrics-report", default=None, metavar="PATH",
+                    help="write the metrics registry snapshot JSON here")
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable the metrics + span layer")
     ap.add_argument("--objective", default=None, choices=list(OBJECTIVES),
                     help="route every GEMM through the autotuner "
                          "adjudicated on this metric (DESIGN.md §8); "
                          "default keeps the XLA engine")
     args = ap.parse_args(argv)
+
+    # observability (DESIGN.md §12): per-step spans (energy attributed
+    # to them by the meter) + a step-latency histogram in the process
+    # registry, both written out on request
+    tracer = None
+    if args.trace and not args.no_obs:
+        tracer = Tracer(enabled=True)
+        set_default_tracer(tracer)
+    metrics = null_registry() if args.no_obs else default_registry()
+    m_step_ms = metrics.histogram("train.step_ms")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     shape = ShapeSpec("cli", seq_len=args.seq, global_batch=args.batch,
@@ -178,11 +197,14 @@ def main(argv=None):
 
     def one_step(state, step):
         _, batch = next(loader_iter)
-        with EnergyMeter(f"step-{step}", backend=power, reporter=energy,
-                         hints=step_hints) as em:
+        t0 = time.perf_counter()
+        with trace_span("train.step", step=step), \
+                EnergyMeter(f"step-{step}", backend=power, reporter=energy,
+                            hints=step_hints) as em:
             p, o, metrics = step_fn(state["params"], state["opt"], batch)
             state = {"params": p, "opt": o,
                      "last_loss": float(metrics["loss"])}
+        m_step_ms.observe((time.perf_counter() - t0) * 1e3)
         if step % args.log_every == 0 or step == start + args.steps - 1:
             print(f"[train] step {step} loss {metrics['loss']:.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "
@@ -238,6 +260,13 @@ def main(argv=None):
     if args.energy_report:
         energy.write(args.energy_report)
         print(f"[train] wrote energy report to {args.energy_report}")
+    if args.metrics_report:
+        metrics.write(args.metrics_report)
+        print(f"[train] wrote metrics snapshot to {args.metrics_report}")
+    if args.trace and tracer is not None:
+        tracer.write_jsonl(args.trace)
+        print(f"[train] wrote {len(tracer.events)} trace events to "
+              f"{args.trace}")
     loader.close()
     if ckpt:
         ckpt.close()

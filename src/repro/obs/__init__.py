@@ -1,0 +1,22 @@
+# Observability subsystem (DESIGN.md §12): a zero-dependency metrics
+# registry (Counter/Gauge/log2-bucket Histogram with deterministic
+# snapshots) and a span tracer (monotonic timestamps, JSONL + Chrome
+# trace_event export via `python -m repro.obs.trace`).  Near-zero cost
+# when disabled; the serve loop, tuner, energy meter and launch drivers
+# all record through it.
+from .metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_registry,
+    null_registry,
+)
+from .trace import (  # noqa: F401
+    Tracer,
+    attribute_energy,
+    default_tracer,
+    set_default_tracer,
+    trace_span,
+    validate_trace,
+)

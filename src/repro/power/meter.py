@@ -19,6 +19,8 @@ import threading
 import time
 from dataclasses import dataclass, field
 
+from repro.obs.trace import attribute_energy
+
 from .backends import PowerBackend, WorkloadHints, detect_backend
 
 __all__ = ["EnergyReading", "EnergyMeter", "default_backend"]
@@ -145,6 +147,13 @@ class EnergyMeter:
         if active:
             # attach to the enclosing meter's innermost open interval
             active[-1]._open[-1][2].append(r)
+        if not active:
+            # span attribution (DESIGN.md §12): a *top-level* reading's
+            # joules land on the innermost open trace span of this
+            # thread, so the trace answers "which phase burned the
+            # joules".  Nested readings already ride inside their
+            # parent's total -- attributing them too would double-count.
+            attribute_energy(r.joules, r.seconds)
         if self.reporter is not None and not active:
             self.reporter.add(r)
         elif self.reporter is not None and active:

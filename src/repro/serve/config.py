@@ -32,6 +32,14 @@ class ServeConfig:
     Layout: ``layout`` is a :class:`~repro.serve.state.KVLayout` (string
     names accepted for CLI plumbing); ``page_size``/``num_pages`` shape
     the paged pool and are ignored under CONTIGUOUS.
+
+    Observability (DESIGN.md §12): ``latency_slo_ms`` is the
+    time-to-first-token target the loop accounts per-request SLO
+    attainment against (requests carry arrival timestamps through
+    ``ServeLoop.submit``); ``None`` disables SLO accounting but TTFT /
+    TPOT / e2e latency is still recorded.  ``obs=False`` turns the
+    whole metrics + span layer into no-ops (near-zero overhead,
+    benchmarked in ``bench_obs_overhead``).
     """
 
     slots: int = 4
@@ -46,6 +54,8 @@ class ServeConfig:
     mode: str = "lockstep"
     prefill_budget: int = 32
     prefix_sharing: bool = True
+    latency_slo_ms: float | None = None
+    obs: bool = True
 
     def __post_init__(self):
         # normalise string layouts ("paged" from argparse) to the enum
@@ -60,6 +70,10 @@ class ServeConfig:
         if self.prefill_budget < 1:
             raise ValueError(
                 f"prefill_budget must be >= 1, got {self.prefill_budget}")
+        if self.latency_slo_ms is not None and self.latency_slo_ms <= 0:
+            raise ValueError(
+                f"latency_slo_ms must be > 0 (or None to disable SLO "
+                f"accounting), got {self.latency_slo_ms}")
 
     @property
     def paged(self) -> bool:

@@ -172,7 +172,8 @@ class PageAllocator:
         self.index = PrefixIndex() if prefix_sharing else None
         self._ever_freed: set[int] = set()
         self.stats = {"allocated": 0, "freed": 0, "reused": 0,
-                      "cow_forks": 0, "prefix_hits": 0, "shared_pages": 0}
+                      "cow_forks": 0, "prefix_hits": 0, "shared_pages": 0,
+                      "revived": 0}
 
     # ------------------------------------------------------------- queries --
     @property
@@ -323,8 +324,13 @@ class PageAllocator:
         for pg, pid in enumerate(matched):
             self._check_extent(slot, pg)
             if self.ref[pid] == 0:
+                # revived: a freed-but-indexed page leaves the cached
+                # FIFO *without a scrub* -- counted separately from
+                # scrubbed reuse so telemetry can show how much reuse
+                # the prefix cache makes copy- and scrub-free
                 self._free_cached.remove(pid)
                 self.ref[pid] = 1
+                self.stats["revived"] += 1
             else:
                 self.ref[pid] += 1
             self.block_table[slot, pg] = pid

@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core.energy import F_SCALE_MAX, TPU_V5E, clamp_f_scale
 from repro.core.schedule import is_pow2
+from repro.obs.metrics import default_registry
 
 from .cache import TuneCache, cache_key, default_cache_path
 from .cost import AttnSpec, CostEstimate, EpilogueSpec, TuneConfig, \
@@ -335,6 +336,14 @@ def autotune(
                                        interpret=interpret, batched=batched,
                                        epilogue=epilogue)
                 measured[repr(kc)] = t_nom
+                # model-calibration drift (DESIGN.md §12): the ratio of
+                # measured wall time to the analytic prediction, one
+                # observation per fresh measure_config -- log2 buckets
+                # make "within 2x" one bucket, so the histogram is a
+                # first-class view of how honest the cost model is
+                default_registry().histogram(
+                    "tune.drift.time_ratio").observe(
+                    t_nom / max(base[kc].time, 1e-12))
             # the host runs at nominal frequency.  objective="time"
             # therefore adjudicates on the *raw* measurement: a DVFS
             # point the device cannot actually switch to must never let

@@ -15,6 +15,7 @@ import os
 import tempfile
 
 from repro.core.schedule import _ceil_pow2
+from repro.obs.metrics import default_registry
 
 __all__ = ["TuneCache", "default_cache_path", "shape_bucket", "cache_key"]
 
@@ -118,7 +119,16 @@ class TuneCache:
 
     # ------------------------------------------------------------------ api
     def get(self, key: str) -> dict | None:
-        return self._load().get(key)
+        hit = self._load().get(key)
+        # per-keyspace hit/miss telemetry (DESIGN.md §12): the keyspace
+        # is the key's kernel-kind prefix (mm / bmm / attn), so one
+        # snapshot shows which searches the on-disk cache is absorbing.
+        # NB: in-process memo hits (_memoised_resolve) never reach here.
+        keyspace = key.split("/", 1)[0]
+        default_registry().counter(
+            f"tune.cache.{'hit' if hit is not None else 'miss'}"
+            f".{keyspace}").inc()
+        return hit
 
     def put(self, key: str, entry: dict) -> None:
         # merge-on-write: re-read the file so entries persisted by other
