@@ -1,0 +1,89 @@
+"""Static-analysis drift rows (DESIGN.md §13).
+
+Three row families under ``analysis.drift/``:
+
+* ``static_bytes/<schedule>`` -- relative deviation between the
+  schedule verifier's independent stack-distance LRU traffic and
+  ``tune/cost``'s replayed prediction on a pressured grid.  The
+  ``us_per_call`` column is the wall cost of the static check itself
+  (it must stay cheap enough for CI); the drift lives in ``derived``
+  and is asserted <= STATIC_DRIFT_TOL in CI's bench validation.
+* ``hlo_bytes`` -- model-vs-compiled-HLO byte parity on the library
+  GEMM (the auditor's cross-check), drift in ``derived``.
+* ``time_ratio`` -- the runtime calibration telemetry: after a small
+  measured (interpret-mode) autotune, the median of the
+  ``tune.drift.time_ratio`` histogram -- how far wall time sits from
+  the analytic prediction on this backend.  Informational off-TPU
+  (interpret wall times measure the interpreter), but the row proves
+  the telemetry is actually populated by a real search.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.analysis import STATIC_DRIFT_TOL, audit_gemm, \
+    crosscheck_cost_model
+from repro.obs.metrics import default_registry
+from repro.tune import autotune
+from repro.tune.cache import TuneCache
+
+from .common import pick
+
+
+def _static_rows():
+    # pressured cache (a few k-panels), so the schedules actually
+    # diverge and the cross-check exercises the interesting regime
+    mt, kt, cap = pick((16, 4, 16), (8, 2, 8))
+    rows = []
+    for sched in ("rowmajor", "morton", "hilbert"):
+        t0 = time.perf_counter()
+        rep = crosscheck_cost_model(sched, mt, mt, kt, capacity=cap)
+        us = (time.perf_counter() - t0) * 1e6
+        s = rep.stats
+        rows.append((
+            f"analysis.drift/static_bytes/{sched}", us,
+            f"model_MB={s['model_bytes'] / 1e6:.3f};"
+            f"static_MB={s['static_bytes'] / 1e6:.3f};"
+            f"rel_drift={s['rel_drift']:.5f};tol={STATIC_DRIFT_TOL};"
+            f"ok={rep.ok}"))
+    return rows
+
+
+def _hlo_row():
+    m, n, k = pick((1024, 1024, 512), (256, 256, 128))
+    t0 = time.perf_counter()
+    rep = audit_gemm(m, n, k)
+    us = (time.perf_counter() - t0) * 1e6
+    s = rep.stats
+    return [(
+        "analysis.drift/hlo_bytes", us,
+        f"hlo_MB={s['traffic_bytes'] / 1e6:.3f};"
+        f"model_MB={s['expected_bytes'] / 1e6:.3f};"
+        f"rel_drift={s['byte_drift']:.5f};tol={s['byte_tol']};"
+        f"ok={rep.ok}")]
+
+
+def _time_ratio_row(tmp_cache: str):
+    size = pick(128, 64)
+    hist = default_registry().histogram("tune.drift.time_ratio")
+    before = hist.count
+    t0 = time.perf_counter()
+    autotune(size, size, size, measure=True, interpret=True, topk=2,
+             refresh=True, cache=TuneCache(tmp_cache))
+    us = (time.perf_counter() - t0) * 1e6
+    fresh = hist.count - before
+    q = hist.quantile(0.5)
+    return [(
+        "analysis.drift/time_ratio", us,
+        f"median_ratio={q:.3f};observations={fresh};"
+        f"backend_note=interpret-mode off-TPU")]
+
+
+def run():
+    import os
+    import tempfile
+
+    rows = _static_rows() + _hlo_row()
+    with tempfile.TemporaryDirectory() as d:
+        rows += _time_ratio_row(os.path.join(d, "tune.json"))
+    return rows

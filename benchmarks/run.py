@@ -31,8 +31,11 @@ import time
 # 5 adds the prefix-sharing rows (bench_prefix_sharing: shared-vs-unshared
 # admission capacity, share-scaled bytes, continuous-serve wall time);
 # 6 adds the observability rows (bench_obs_overhead: instrument micro
-# costs + enabled-vs-disabled serve-step overhead, asserted < 5% in CI)
-SCHEMA_VERSION = 6
+# costs + enabled-vs-disabled serve-step overhead, asserted < 5% in CI);
+# 7 adds the static-analysis drift rows (bench_analysis_drift:
+# stack-distance-vs-cost-model byte drift per schedule, model-vs-HLO
+# byte parity, tune.drift.time_ratio median)
+SCHEMA_VERSION = 7
 
 MODULES = [
     "bench_exec_time",        # Table IV
@@ -51,6 +54,7 @@ MODULES = [
     "bench_paged_kv",         # DESIGN.md §10: paged vs contiguous decode
     "bench_prefix_sharing",   # DESIGN.md §11: COW prefix-sharing capacity
     "bench_obs_overhead",     # DESIGN.md §12: metrics/span layer overhead
+    "bench_analysis_drift",   # DESIGN.md §13: static-vs-model drift rows
 ]
 
 

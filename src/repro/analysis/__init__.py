@@ -1,0 +1,37 @@
+"""Static analysis passes over kernel configs, SFC schedules, and
+compiled HLO (DESIGN.md §13).
+
+Three passes, no kernel execution required:
+
+* :mod:`repro.analysis.contracts` -- kernel contract checker: block
+  divisibility/padding, index-map replay over the full grid (in-bounds
+  reads, exactly-once output-tile writes), VMEM working-set budget, and
+  the paged-attention block-table contract.
+* :mod:`repro.analysis.schedule` -- schedule verifier: bijection proofs
+  for every ``grid_schedule`` permutation plus an independent LRU
+  stack-distance traffic model cross-checked against ``tune/cost`` (the
+  static drift detector CI gates on).
+* :mod:`repro.analysis.hlo_audit` -- HLO traffic auditor built on
+  ``launch/hlo.py``: unfused-epilogue round trips, host transfers,
+  unexpected collectives, silent bf16->f32 upcasts, and model-vs-HLO
+  byte parity.
+
+``python -m repro.analysis --config paper --shape MxNxK`` runs all
+three end-to-end and emits a JSON report (the CI ``analysis`` job).
+"""
+from .contracts import (ContractReport, Violation, check_attn_contract,
+                        check_gemm_contract, gemm_vmem_bytes)
+from .hlo_audit import AuditReport, Finding, audit_gemm, audit_hlo, \
+    epilogue_fusion_gate
+from .schedule import (STATIC_DRIFT_TOL, crosscheck_cost_model,
+                       stack_distance_traffic, verify_order,
+                       verify_schedule)
+
+__all__ = [
+    "Violation", "ContractReport", "check_gemm_contract",
+    "check_attn_contract", "gemm_vmem_bytes",
+    "verify_order", "verify_schedule", "stack_distance_traffic",
+    "crosscheck_cost_model", "STATIC_DRIFT_TOL",
+    "Finding", "AuditReport", "audit_hlo", "audit_gemm",
+    "epilogue_fusion_gate",
+]

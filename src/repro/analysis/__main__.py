@@ -1,0 +1,194 @@
+"""``python -m repro.analysis`` -- run all three static passes and emit
+a JSON report (the CI ``analysis`` job; DESIGN.md §13.4).
+
+Examples::
+
+    python -m repro.analysis --config paper --shape 2048x2048x256
+    python -m repro.analysis --epilogue-gate
+    python -m repro.analysis --schedules-only --max-grid 16
+
+Exit status is 0 iff every section passed; the report is printed to
+stdout (or ``--out``) either way, so CI uploads it as an artifact on
+failure too.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core.energy import TPU_V5E
+
+from .contracts import check_gemm_contract
+from .schedule import crosscheck_cost_model, verify_schedule
+
+_SWEEP_SCHEDULES = ("rowmajor", "colmajor", "boustrophedon", "morton",
+                    "hilbert", "supertile")
+
+
+def _parse_shape(text: str) -> tuple:
+    try:
+        m, n, k = (int(p) for p in text.lower().split("x"))
+        return m, n, k
+    except ValueError:
+        raise SystemExit(
+            f"--shape must be MxNxK (e.g. 2048x2048x256), got {text!r}"
+        ) from None
+
+
+def _candidate_section(m: int, n: int, k: int, dtype_bytes: int) -> dict:
+    """Full-level contract check over the autotuner's candidate grid for
+    this shape: everything the tuner would compile must pass, and the
+    checker must also prove it *rejects* the canonical bad configs."""
+    from repro.tune.autotune import candidate_configs
+    from repro.tune.cost import TuneConfig
+
+    checked = rejected = 0
+    bad = []
+    for cfg in candidate_configs(m, n, k, dtype_bytes=dtype_bytes):
+        if cfg.schedule == "xla":
+            continue
+        rep = check_gemm_contract(cfg, m, n, k,
+                                  dtype_bytes=dtype_bytes, level="full")
+        checked += 1
+        if not rep.ok:
+            rejected += 1
+            bad.append(rep.to_dict())
+    # negative controls: the checker must veto these
+    over = check_gemm_contract(
+        TuneConfig(schedule="morton", bm=4096, bn=4096, bk=512),
+        4096, 4096, 512, dtype_bytes=dtype_bytes, level="fast")
+    nonsq = check_gemm_contract(
+        TuneConfig(schedule="hilbert", use_prefetch=False),
+        3 * 128, 128, 256, dtype_bytes=dtype_bytes, level="fast")
+    controls_ok = ("vmem-budget" in over.codes()
+                   and "no-closed-form" in nonsq.codes())
+    return {
+        "ok": rejected == 0 and controls_ok,
+        "checked": checked,
+        "rejected": rejected,
+        "rejections": bad,
+        "negative_controls_ok": controls_ok,
+    }
+
+
+def _schedule_section(max_grid: int) -> dict:
+    """Bijection proofs for every schedule at every grid size up to
+    ``max_grid`` x ``max_grid`` (square for morton/hilbert/peano,
+    rectangular too for the rest), plus the static byte-drift
+    cross-check on pow2 square grids."""
+    from repro.core.schedule import SCHEDULES
+
+    failures = []
+    proved = 0
+    for name in SCHEDULES:
+        for r in range(1, max_grid + 1):
+            for c in range(1, max_grid + 1):
+                rep = verify_schedule(name, r, c,
+                                      g=4 if name == "supertile" else 0)
+                proved += 1
+                if not rep.ok:
+                    failures.append(rep.to_dict())
+    drift = []
+    for name in ("rowmajor", "boustrophedon", "morton", "hilbert",
+                 "supertile"):
+        for mt in (2, 4, 8, 16):
+            rep = crosscheck_cost_model(
+                name, mt, mt, 2, g=4 if name == "supertile" else 0)
+            drift.append({"schedule": name, "grid": mt,
+                          "ok": rep.ok, **rep.stats})
+            if not rep.ok:
+                failures.append(rep.to_dict())
+    return {"ok": not failures, "orders_proved": proved,
+            "drift": drift, "failures": failures}
+
+
+def _hlo_section(m: int, n: int, k: int, dtype: str) -> dict:
+    """Compile the library GEMM, prove byte parity against the cost
+    model, and run the fused-epilogue regression gate."""
+    from .hlo_audit import audit_gemm, epilogue_fusion_gate
+
+    parity = audit_gemm(m, n, k, dtype=dtype)
+    gate = epilogue_fusion_gate()
+    return {
+        "ok": parity.ok and gate["gate_ok"],
+        "byte_parity": parity.to_dict(),
+        "epilogue_gate": {
+            "gate_ok": gate["gate_ok"],
+            "unfused": gate["unfused"].to_dict(),
+            "fused": gate["fused"].to_dict(),
+        },
+    }
+
+
+def _winner_section(m: int, n: int, k: int, dtype_bytes: int) -> dict:
+    """Resolve the tuned config for this shape (analytic; no kernels
+    compiled) and run it through the full contract checker."""
+    from repro.tune.autotune import autotune
+
+    best = autotune(m, n, k, measure=False).config
+    rep = check_gemm_contract(best, m, n, k, dtype_bytes=dtype_bytes,
+                              level="full")
+    return {"ok": rep.ok, "config": best.to_dict(),
+            "contract": rep.to_dict()}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="kernel-contract checker, SFC schedule verifier "
+                    "and HLO traffic auditor")
+    ap.add_argument("--config", default="paper",
+                    help="problem preset; 'paper' = the paper's GEMM "
+                         "study (shape taken from --shape)")
+    ap.add_argument("--shape", default="2048x2048x256",
+                    help="GEMM problem as MxNxK")
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--max-grid", type=int, default=16,
+                    help="largest tile grid for the schedule sweep")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON report here (default: stdout)")
+    ap.add_argument("--epilogue-gate", action="store_true",
+                    help="run only the fused-epilogue regression gate")
+    ap.add_argument("--schedules-only", action="store_true",
+                    help="run only the schedule verifier section")
+    args = ap.parse_args(argv)
+
+    m, n, k = _parse_shape(args.shape)
+    import numpy as np
+    dtype_bytes = int(np.dtype(args.dtype).itemsize)
+
+    report = {"config": args.config, "shape": [m, n, k],
+              "dtype": args.dtype, "hw": "TPU_V5E",
+              "vmem_per_chip": TPU_V5E.vmem_per_chip,
+              "sections": {}}
+    if args.epilogue_gate:
+        from .hlo_audit import epilogue_fusion_gate
+        gate = epilogue_fusion_gate()
+        report["sections"]["epilogue_gate"] = {
+            "ok": gate["gate_ok"],
+            "unfused": gate["unfused"].to_dict(),
+            "fused": gate["fused"].to_dict()}
+    elif args.schedules_only:
+        report["sections"]["schedules"] = _schedule_section(args.max_grid)
+    else:
+        report["sections"]["contracts"] = _candidate_section(
+            m, n, k, dtype_bytes)
+        report["sections"]["schedules"] = _schedule_section(args.max_grid)
+        report["sections"]["winner"] = _winner_section(
+            m, n, k, dtype_bytes)
+        report["sections"]["hlo"] = _hlo_section(m, n, k, args.dtype)
+
+    report["ok"] = all(s.get("ok") for s in report["sections"].values())
+    text = json.dumps(report, indent=2, default=str)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(text + "\n")
+        print(f"[analysis] report -> {args.out}  ok={report['ok']}")
+    else:
+        print(text)
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -102,7 +102,7 @@ def load_checkpoint(root: str, step: int, like_tree) -> tuple:
         arr = np.load(os.path.join(path, key + ".npy"))
         crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
         if crc != info["crc32"]:
-            raise IOError(f"checkpoint corruption in {key} @ step {step}")
+            raise OSError(f"checkpoint corruption in {key} @ step {step}")
         want = info["dtype"]
         if str(arr.dtype) != want:  # restore logical dtype (e.g. bfloat16)
             import ml_dtypes  # noqa: F401  (registers the dtypes)
@@ -110,7 +110,7 @@ def load_checkpoint(root: str, step: int, like_tree) -> tuple:
         leaves[key] = arr
     missing = set(flat_like) - set(leaves)
     if missing:
-        raise IOError(f"checkpoint missing leaves: {sorted(missing)[:5]}")
+        raise OSError(f"checkpoint missing leaves: {sorted(missing)[:5]}")
     ordered = [leaves[k] for k in flat_like]  # dict order == flatten order
     tree = jax.tree_util.tree_unflatten(treedef, ordered)
     return tree, manifest["meta"]

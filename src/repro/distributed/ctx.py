@@ -59,13 +59,11 @@ def constrain(x, *spec):
     # axes already Manual (inside a shard_map region) must not appear in
     # constraints -- they are sharded by construction there.
     manual: set = set()
-    try:
+    with contextlib.suppress(Exception):
         am = jax.sharding.get_abstract_mesh()
         if am is not None and am.axis_names:
             manual = {n for n, t in zip(am.axis_names, am.axis_types)
                       if t == jax.sharding.AxisType.Manual}
-    except Exception:
-        pass
     resolved = []
     for dim, s in zip(x.shape, spec):
         if s == "dp":

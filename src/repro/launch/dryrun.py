@@ -36,7 +36,7 @@ def _json_safe(d):
 
 def run_cell(arch: str, shape: str, mesh_kind: str, outdir: str,
              grad_accum: int | None = None, device_order: str = "rowmajor",
-             extra_tag: str = "") -> dict:
+             extra_tag: str = "", audit: bool = False) -> dict:
     from repro.configs import get_config
     from repro.launch.hlo import analyze_hlo, collective_bytes, op_census
     from repro.launch.mesh import make_production_mesh, mesh_chips
@@ -82,6 +82,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, outdir: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # newer jax: one dict per module
+        cost = cost[0] if cost else {}
     print(f"[{arch} x {shape} x {mesh_kind}] memory_analysis:", mem)
     print(f"[{arch} x {shape} x {mesh_kind}] cost_analysis: flops="
           f"{(cost or {}).get('flops', float('nan')):.3e} "
@@ -122,6 +124,20 @@ def run_cell(arch: str, shape: str, mesh_kind: str, outdir: str,
         "t_lower_s": t_lower, "t_compile_s": t_compile,
         "device_order": device_order,
     }
+    if audit:
+        # static lint pass over the compiled module (DESIGN.md §13.3).
+        # Decode steps run the generation hot loop, so a host transfer
+        # there is an error; train/prefill steps on CPU backends are
+        # legitimately unfused, so epilogue round trips stay warnings.
+        from repro.analysis.hlo_audit import audit_hlo
+        rep = audit_hlo(
+            hlo, subject=f"{arch}/{shape}/{mesh_kind}",
+            forbid_host_transfers=(spec.kind == "decode"))
+        rec["audit"] = rep.to_dict()
+        for f in rep.findings:
+            print(f"[audit] {f.severity}: {f.code} -- {f.message}")
+        if not rep.ok:
+            rec["status"] = "audit-failed"
     os.makedirs(outdir, exist_ok=True)
     tag = f"{arch}__{shape}__{mesh_kind}" + (
         f"__{extra_tag}" if extra_tag else "")
@@ -163,7 +179,8 @@ def _sweep(args):
             reap()
             time.sleep(0.5)
         tag = f"{arch}__{shape}__{mesh}"
-        fh = open(os.path.join(logs, tag + ".log"), "w")
+        # held open across the child's lifetime; closed in reap()
+        fh = open(os.path.join(logs, tag + ".log"), "w")  # noqa: SIM115
         cmd = [sys.executable, "-m", "repro.launch.dryrun",
                "--arch", arch, "--shape", shape, "--mesh", mesh,
                "--out", args.out]
@@ -192,6 +209,9 @@ def main():
     ap.add_argument("--tag", default="")
     ap.add_argument("--sweep", action="store_true")
     ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--audit", action="store_true",
+                    help="run the HLO traffic auditor over each "
+                         "compiled step; exit 1 on error findings")
     args = ap.parse_args()
 
     if args.sweep:
@@ -203,12 +223,14 @@ def main():
             rec = run_cell(args.arch, args.shape, mk, args.out,
                            grad_accum=args.grad_accum,
                            device_order=args.device_order,
-                           extra_tag=args.tag)
+                           extra_tag=args.tag, audit=args.audit)
             print(f"[dryrun] {args.arch} x {args.shape} x {mk}: "
                   f"{rec['status']}")
+            if rec["status"] == "audit-failed":
+                raise SystemExit(1)
         except Exception:
             traceback.print_exc()
-            raise SystemExit(1)
+            raise SystemExit(1) from None
 
 
 if __name__ == "__main__":

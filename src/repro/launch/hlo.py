@@ -97,6 +97,26 @@ def op_census(hlo_text: str, ops=("fusion", "dot", "convolution",
 # ---------------------------------------------------------------------------
 
 _COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_OPERAND = re.compile(
+    r"(?:([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?\s+)?%([\w.\-]+)")
+
+
+def _operands(line: str, op: str) -> list:
+    """Operand ``(name, inline_shape_or_None)`` pairs of ``op`` in
+    ``line``.  Post-optimisation dumps carry inline operand shapes
+    (``dot(f32[8,16]{1,0} %x, ...)``); hand-written or pre-opt HLO uses
+    bare ``%name`` refs -- both forms must resolve, so callers fall back
+    to the computation's shape table when the inline shape is absent."""
+    idx = line.find(op + "(")
+    if idx < 0:
+        return []
+    span = line[idx + len(op) + 1:]
+    end = span.find(")")
+    if end >= 0:
+        span = span[:end]
+    return [(mo.group(3),
+             (mo.group(1), mo.group(2)) if mo.group(1) else None)
+            for mo in _OPERAND.finditer(span)]
 _INSTR_HEAD = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
 _OPCODE = re.compile(r"(?:^|\s)([a-z][\w\-]*)\(")
 _TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
@@ -175,28 +195,34 @@ def analyze_hlo(text: str) -> dict:
                     n = 1
                     for d in (dims.split(",") if dims else []):
                         n *= int(d)
-                    ops_m = re.search(
-                        r"dot\(%?([\w.\-]+),\s*%?([\w.\-]+)", ln)
+                    opnds = _operands(ln, "dot")
                     cd = _CDIMS.search(ln)
                     k = 1
-                    if ops_m and cd and ops_m.group(1) in shapes:
-                        lshape = _parse_shape(shapes[ops_m.group(1)])
-                        if lshape:
-                            ldims = [int(x) for x in
-                                     lshape[0][1].split(",") if x]
-                            for ci in (cd.group(1).split(",")
-                                       if cd.group(1) else []):
-                                ci = int(ci)
-                                if ci < len(ldims):
-                                    k *= ldims[ci]
+                    lhs = None
+                    if opnds:
+                        nm, inline = opnds[0]
+                        if inline is not None:
+                            lhs = inline
+                        elif nm in shapes:
+                            ls = _parse_shape(shapes[nm])
+                            lhs = ls[0] if ls else None
+                    if lhs is not None and cd:
+                        ldims = [int(x) for x in lhs[1].split(",") if x]
+                        for ci in (cd.group(1).split(",")
+                                   if cd.group(1) else []):
+                            ci = int(ci)
+                            if ci < len(ldims):
+                                k *= ldims[ci]
                     flops = 2.0 * n * k
                     # fused-traffic model: a dot reads both operands and
                     # writes its result once (softmax/convert chains fuse
                     # into neighbours on TPU)
                     db = _bytes_of(ishape)
-                    for g in (1, 2):
-                        if ops_m and ops_m.group(g) in shapes:
-                            db += _bytes_of(shapes[ops_m.group(g)])
+                    for nm, inline in opnds[:2]:
+                        if inline is not None:
+                            db += _shape_bytes(*inline)
+                        elif nm in shapes:
+                            db += _bytes_of(shapes[nm])
                     st["fused_bytes"] += db
                 st["flops"] += flops
             if not is_fusion_body and op not in no_traffic:
@@ -206,10 +232,14 @@ def analyze_hlo(text: str) -> dict:
                     # full buffer.  Plain DUS: use the update operand shape;
                     # DUS fusions (scan stacking): buffer dim0 is the stack
                     # depth, so update = result/dim0.
-                    om = re.search(
-                        r"dynamic-update-slice\(%?[\w.\-]+,\s*%?([\w.\-]+)",
-                        ln)
-                    upd = shapes.get(om.group(1)) if om else None
+                    opnds = _operands(ln, "dynamic-update-slice")
+                    upd = None
+                    if len(opnds) >= 2:
+                        nm, inline = opnds[1]
+                        if inline is not None:
+                            upd = f"{inline[0]}[{inline[1]}]"
+                        else:
+                            upd = shapes.get(nm)
                     if upd is not None:
                         st["write_bytes"] += _bytes_of(upd)
                         st["fused_bytes"] += 2 * _bytes_of(upd)

@@ -70,8 +70,6 @@ def decode_inputs(cfg: ArchConfig, shape: ShapeSpec | str, *,
         shape = SHAPES[shape]
     b = shape.global_batch
     tokens = _arr((b, 1), jnp.int32, abstract, seed, "tokens", cfg.vocab)
-    if abstract:
-        pos = jax.ShapeDtypeStruct((), jnp.int32)
-    else:
-        pos = jnp.asarray(shape.seq_len - 1, jnp.int32)
+    pos = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+           else jnp.asarray(shape.seq_len - 1, jnp.int32))
     return tokens, pos

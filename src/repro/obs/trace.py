@@ -29,6 +29,7 @@ Load the output in Perfetto (https://ui.perfetto.dev) or
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import threading
@@ -104,10 +105,8 @@ class _Span:
         if st and st[-1] is self._ev:
             st.pop()
         else:  # misnested exit: drop without corrupting siblings
-            try:
+            with contextlib.suppress(ValueError):
                 st.remove(self._ev)
-            except ValueError:
-                pass
         self._tracer.events.append(self._ev)
         return False
 

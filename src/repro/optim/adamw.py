@@ -6,7 +6,7 @@ Optimizer state is a dict {m, v, master, count}; its sharding (param spec
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp

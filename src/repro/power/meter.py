@@ -156,12 +156,12 @@ class EnergyMeter:
             attribute_energy(r.joules, r.seconds)
         if self.reporter is not None and not active:
             self.reporter.add(r)
-        elif self.reporter is not None and active:
+        elif (self.reporter is not None and active
+              and active[-1].reporter is not self.reporter):
             # nested reading rides along inside its parent; report it
             # directly only if the parent reports elsewhere (different
             # reporter) or not at all
-            if active[-1].reporter is not self.reporter:
-                self.reporter.add(r)
+            self.reporter.add(r)
 
     # ------------------------------------------------------------ decorator
     def __call__(self, fn):

@@ -384,21 +384,52 @@ class PageAllocator:
         return old, new
 
     def check_invariants(self) -> None:
-        """Refcount bookkeeping audit (tests): every pool page is either
-        free exactly once or referenced by exactly ``ref`` table
-        entries, and the two never overlap."""
+        """Full-state corruption audit: every pool page is either free
+        exactly once or referenced by exactly ``ref`` table entries,
+        the two never overlap, and every cached-free page is still
+        reachable through the prefix index.  Raises
+        :class:`RuntimeError` naming the first offending page id, so a
+        corrupted allocator fails loudly at the call site instead of
+        serving another request's KV rows.  Also the static analyzer's
+        ground truth for the paged-attention table contract
+        (DESIGN.md §13.1)."""
         free = list(self._free) + list(self._free_cached)
-        assert len(free) == len(set(free)), "double-free"
+        seen: set = set()
+        for pid in free:
+            if pid in seen:
+                raise RuntimeError(
+                    f"page {pid}: double-free (appears more than once "
+                    f"across the free pools)")
+            seen.add(pid)
         counts = np.zeros(self.num_pages, np.int64)
         for s in range(self.slots):
             for pid in self.slot_pages(s):
                 counts[pid] += 1
         for pid in range(self.num_pages):
-            if pid in set(free):
-                assert self.ref[pid] == 0 and counts[pid] == 0, pid
-            else:
-                assert self.ref[pid] == counts[pid] > 0, \
-                    (pid, int(self.ref[pid]), int(counts[pid]))
+            ref, cnt = int(self.ref[pid]), int(counts[pid])
+            if ref < 0:
+                raise RuntimeError(
+                    f"page {pid}: negative refcount {ref}")
+            if pid in seen:
+                if ref != 0 or cnt != 0:
+                    raise RuntimeError(
+                        f"page {pid}: on a free pool but still "
+                        f"referenced (ref={ref}, mapped by {cnt} "
+                        f"table entries)")
+            elif cnt == 0:
+                raise RuntimeError(
+                    f"page {pid}: orphaned -- mapped by no slot and "
+                    f"absent from both free pools")
+            elif ref != cnt:
+                raise RuntimeError(
+                    f"page {pid}: refcount {ref} != {cnt} mapping "
+                    f"table entries")
+        for pid in self._free_cached:
+            if self.index is None or pid not in self.index:
+                raise RuntimeError(
+                    f"page {pid}: on the cached-free list but evicted "
+                    f"from the prefix index (unreachable for reuse, "
+                    f"unsafe to scrub-free)")
 
     def active_lengths(self) -> np.ndarray:
         return self.seq_lens.copy()

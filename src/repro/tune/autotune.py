@@ -29,7 +29,6 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.energy import F_SCALE_MAX, TPU_V5E, clamp_f_scale
-from repro.core.schedule import is_pow2
 from repro.obs.metrics import default_registry
 
 from .cache import TuneCache, cache_key, default_cache_path
@@ -135,36 +134,51 @@ def candidate_configs(
     blocks=_BLOCK_CANDIDATES,
     include_xla: bool = True,
     hw=TPU_V5E,
+    epilogue: EpilogueSpec | None = None,
 ) -> list[TuneConfig]:
     """Enumerate the valid search space for an M x N x K GEMM.
 
-    Filters: blocks must fit in VMEM (A + B + C + f32 accumulator) and
-    not exceed the (padded) problem; ``use_prefetch=False`` variants are
-    only emitted where the closed-form in-``index_map`` decode exists
-    (square power-of-two grids for morton/hilbert -- the paper-faithful
-    compute-for-locality trade).
+    Every non-xla candidate is vetted by the static contract checker
+    (:func:`repro.analysis.contracts.check_gemm_contract`, fast level):
+    VMEM working set (A + B + C + f32 accumulator + epilogue tiles)
+    within budget, and ``use_prefetch=False`` variants only where the
+    closed-form in-``index_map`` decode exists (square power-of-two
+    grids for morton/hilbert -- the paper-faithful compute-for-locality
+    trade).  Blocks exceeding the (padded) problem are dropped here as
+    pure padding -- a search-space economy, not a contract violation.
     """
+    from repro.analysis.contracts import check_gemm_contract
+
     out: list[TuneConfig] = []
     if include_xla:
         out.append(TuneConfig(schedule="xla"))
     for bm, bn, bk in blocks:
         if bm > max(m, 128) or bn > max(n, 128) or bk > max(k, 128):
             continue  # block would be pure padding
-        vmem_need = (bm * bk + bk * bn + bm * bn) * dtype_bytes \
-            + bm * bn * 4  # f32 accumulator scratch
-        if vmem_need > hw.vmem_per_chip * 0.9:
-            continue
         mt, nt = -(-m // bm), -(-n // bn)
         for sched in schedules:
             if sched == "supertile":
-                for g in _SUPERTILE_G:
-                    if g < max(mt, nt):
-                        out.append(TuneConfig(sched, bm, bn, bk, True, g))
-                continue
-            out.append(TuneConfig(sched, bm, bn, bk, True))
-            if sched in ("morton", "hilbert") and mt == nt and is_pow2(mt):
-                out.append(TuneConfig(sched, bm, bn, bk, False))
+                cands = [TuneConfig(sched, bm, bn, bk, True, g)
+                         for g in _SUPERTILE_G if g < max(mt, nt)]
+            else:
+                cands = [TuneConfig(sched, bm, bn, bk, True)]
+                if sched in ("morton", "hilbert"):
+                    cands.append(TuneConfig(sched, bm, bn, bk, False))
+            out.extend(
+                c for c in cands
+                if check_gemm_contract(c, m, n, k,
+                                       dtype_bytes=dtype_bytes,
+                                       epilogue=epilogue, hw=hw,
+                                       level="fast").ok)
     return out
+
+
+# called with (cfg, m, n, k) immediately before each fresh
+# measure_config during a search -- the seam the contract-checker tests
+# use to prove the tuner never compiles a rejected candidate.  Hooks
+# must not mutate; exceptions propagate (a failing hook is a test
+# assertion, not telemetry).
+_PRECOMPILE_HOOKS: list = []
 
 
 def measure_config(
@@ -296,8 +310,27 @@ def autotune(
             return TuneResult(TuneConfig.from_dict(hit["config"]), key,
                               from_cache=True)
 
-    cands = candidates if candidates is not None else candidate_configs(
-        m, n, k, dtype_bytes=dtype_bytes, hw=hw)
+    if candidates is not None:
+        # explicit candidate lists (tests, sweeps, replays of stale
+        # caches) go through the same static contract gate the
+        # enumerator applies -- a rejected config must never reach
+        # predict(), let alone a compile
+        from repro.analysis.contracts import check_gemm_contract
+
+        cands = []
+        for c in candidates:
+            rep = check_gemm_contract(c, m, n, k,
+                                      dtype_bytes=dtype_bytes,
+                                      epilogue=epilogue, hw=hw,
+                                      level="fast")
+            default_registry().counter("tune.contracts.checked").inc()
+            if rep.ok:
+                cands.append(c)
+            else:
+                default_registry().counter("tune.contracts.rejected").inc()
+    else:
+        cands = candidate_configs(m, n, k, dtype_bytes=dtype_bytes,
+                                  hw=hw, epilogue=epilogue)
     # one LRU replay per kernel config; DVFS variants derived analytically
     base: dict[TuneConfig, CostEstimate] = {}
     for c in cands:
@@ -332,6 +365,8 @@ def autotune(
             kc = e.config.kernel_config()
             t_nom = measured.get(repr(kc))
             if t_nom is None:
+                for hook in _PRECOMPILE_HOOKS:
+                    hook(kc, m, n, k)
                 t_nom = measure_config(kc, m, n, k, dtype,
                                        interpret=interpret, batched=batched,
                                        epilogue=epilogue)
@@ -423,25 +458,42 @@ def _memoised_resolve(path: str, bucket: str, compute) -> TuneConfig:
     return cfg
 
 
-def _validate_for_shape(cfg: TuneConfig, m: int, n: int,
-                        k: int) -> TuneConfig:
+def _validate_for_shape(cfg: TuneConfig, m: int, n: int, k: int,
+                        dtype_bytes: int = 4) -> TuneConfig:
     """Re-check a (possibly cached) config against the *exact* serving
-    shape: winners are bucketed per pow2 range, so a use_prefetch=False
-    winner tuned on a square-pow2 tile grid can be handed a same-bucket
-    shape whose padded grid has no closed-form decode.  Flipping to the
-    scalar-prefetch table is always valid (any grid) and at least as
-    fast (index cost amortised to zero)."""
-    if cfg.use_prefetch or cfg.schedule == "xla":
+    shape, delegating to the static contract checker (fast level) and
+    repairing what it flags:
+
+    * ``no-closed-form`` -- winners are bucketed per pow2 range, so a
+      use_prefetch=False winner tuned on a square-pow2 tile grid can be
+      handed a same-bucket shape whose padded grid has no closed-form
+      decode.  Flipping to the scalar-prefetch table is always valid
+      (any grid) and at least as fast (index cost amortised to zero).
+    * ``vmem-budget`` -- a stale or hand-edited cache entry (or a
+      winner tuned at a smaller dtype) whose working set exceeds VMEM
+      for *this* call would hard-fault the kernel at launch; the blocks
+      are clamped to the 128^3 baseline, which fits on every supported
+      part.  This was a latent gap: the old validator only re-checked
+      the decode mechanism, never the working set.
+
+    repairs preserve every other field -- in particular the tuned
+    f_scale, which is a property of the objective, not of the block
+    geometry or decode mechanism being swapped here (regression-tested).
+    """
+    from repro.analysis.contracts import check_gemm_contract
+
+    if cfg.schedule == "xla":
         return cfg
-    if cfg.schedule in ("rowmajor", "colmajor"):
-        return cfg  # closed-form decode valid on any grid
-    mt, nt = -(-m // cfg.bm), -(-n // cfg.bn)
-    if cfg.schedule in ("morton", "hilbert") and mt == nt and is_pow2(mt):
-        return cfg
-    # NB: replace() keeps every other field -- in particular the tuned
-    # f_scale, which is a property of the objective, not of the decode
-    # mechanism being swapped here (regression-tested)
-    return dataclasses.replace(cfg, use_prefetch=True)
+    for _ in range(2):  # each repair can surface at most one more code
+        codes = check_gemm_contract(
+            cfg, m, n, k, dtype_bytes=dtype_bytes, level="fast").codes()
+        if "vmem-budget" in codes:
+            cfg = dataclasses.replace(cfg, bm=128, bn=128, bk=128)
+        elif "no-closed-form" in codes:
+            cfg = dataclasses.replace(cfg, use_prefetch=True)
+        else:
+            break
+    return cfg
 
 
 def resolve_config(
@@ -481,7 +533,7 @@ def resolve_config(
                          batched=batched, objective=objective,
                          epilogue=epilogue).config)
     # per-call: validity depends on the exact shape, not the bucket
-    return _validate_for_shape(cfg, m, n, k)
+    return _validate_for_shape(cfg, m, n, k, _dtype_bytes(dtype))
 
 
 def resolved_f_scale(

@@ -10,6 +10,7 @@ exception (serving must never die on a cache file).
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import tempfile
@@ -111,10 +112,8 @@ class TuneCache:
                 json.dump(payload, f, indent=1, sort_keys=True)
             os.replace(tmp, self.path)  # atomic publish
         except BaseException:
-            try:
+            with contextlib.suppress(OSError):
                 os.unlink(tmp)
-            except OSError:
-                pass
             raise
 
     # ------------------------------------------------------------------ api
@@ -157,13 +156,14 @@ class TuneCache:
         # an unwritable cache path (read-only HOME in hermetic CI) must
         # never kill serving: the in-memory result stays valid, only
         # persistence is lost
-        try:
+        with contextlib.suppress(OSError):
             self._save()
-        except OSError:
-            pass
 
     def __len__(self) -> int:
         return len(self._load())
+
+    def __iter__(self):
+        return iter(self._load())
 
     def keys(self):
         return self._load().keys()

@@ -234,12 +234,10 @@ def test_auto_schedule_matches_ref_interpret(tune_cache):
     a = _rand((64, 64), jnp.float32, 2)
     b = _rand((64, 64), jnp.float32, 3)
     cfg = resolve_config(64, 64, 64, "float32")
-    if cfg.schedule == "xla":
-        out = sfc_matmul(a, b, schedule="auto", interpret=True)
-    else:
-        out = sfc_matmul(a, b, schedule=cfg.schedule, bm=16, bn=16, bk=16,
-                         use_prefetch=cfg.use_prefetch, interpret=True,
-                         force_pallas=True)
+    kw = (dict(schedule="auto") if cfg.schedule == "xla"
+          else dict(schedule=cfg.schedule, bm=16, bn=16, bk=16,
+                    use_prefetch=cfg.use_prefetch, force_pallas=True))
+    out = sfc_matmul(a, b, interpret=True, **kw)
     np.testing.assert_allclose(np.asarray(out), np.asarray(matmul_ref(a, b)),
                                rtol=1e-5, atol=1e-5)
 
@@ -572,3 +570,75 @@ def test_resolve_memo_invalidated_by_cache_mutation(tune_cache):
     cfg2 = resolve_config(512, 512, 512, "float32")
     assert cfg2 == TuneConfig("hilbert", 256, 256, 128)
     assert cfg2 != cfg1 or cfg1.schedule == "hilbert"
+
+
+def test_validate_for_shape_clamps_overbudget_vmem(tune_cache):
+    """Latent-gap regression (ISSUE 8 satellite): a cached winner whose
+    blocks blow the VMEM working set for the exact serving shape used to
+    sail through validation (only the decode mechanism was re-checked)
+    and would hard-fault at launch.  It must now be clamped to the
+    128^3 baseline, preserving schedule and tuned f_scale."""
+    from repro.tune import resolve_config
+    from repro.tune.autotune import _validate_for_shape
+
+    bad = TuneConfig("morton", 4096, 4096, 512, f_scale=0.75)
+    out = _validate_for_shape(bad, 4096, 4096, 512)
+    assert (out.bm, out.bn, out.bk) == (128, 128, 128)
+    assert out.schedule == "morton" and out.f_scale == 0.75
+    # sane config for the same shape: untouched
+    ok = TuneConfig("morton", 256, 256, 128)
+    assert _validate_for_shape(ok, 4096, 4096, 512) == ok
+    # end-to-end: a stale/hand-edited cache entry cannot reach the
+    # kernel launch with an over-budget working set
+    key = cache_key(4096, 4096, 512, "float32", "cpu")
+    tune_cache.put(key, {"config": bad.to_dict()})
+    got = resolve_config(4096, 4096, 512, "float32")
+    assert (got.bm, got.bn, got.bk) == (128, 128, 128)
+    assert got.f_scale == 0.75
+
+
+def test_autotune_compiles_zero_rejected_candidates(tune_cache,
+                                                    monkeypatch):
+    """ISSUE 8 acceptance: every config the tuner is about to compile
+    (the pre-measure hook seam) passes the full-level contract check --
+    the tuner never wastes a compile on a rejected candidate."""
+    import sys
+
+    import repro.tune.autotune  # noqa: F401 -- ensure module is loaded
+    from repro.analysis import check_gemm_contract
+
+    # the package re-exports the function under the submodule's name, so
+    # reach the module itself through sys.modules
+    at = sys.modules["repro.tune.autotune"]
+
+    monkeypatch.setattr(at, "measure_config",
+                        lambda cfg, m, n, k, dtype, **kw: 1e-3)
+    compiled = []
+    at._PRECOMPILE_HOOKS.append(
+        lambda cfg, m, n, k: compiled.append((cfg, m, n, k)))
+    try:
+        autotune(512, 512, 512, measure=True, topk=8, refresh=True,
+                 cache=tune_cache)
+    finally:
+        at._PRECOMPILE_HOOKS.pop()
+    assert compiled, "hook never fired"
+    for cfg, m, n, k in compiled:
+        rep = check_gemm_contract(cfg, m, n, k, level="full")
+        assert rep.ok, (cfg, rep.to_dict())
+
+
+def test_autotune_filters_explicit_bad_candidates(tune_cache):
+    """Explicit candidate lists go through the same contract gate as
+    the enumerator: an over-budget config is dropped before predict(),
+    and the rejection is counted."""
+    from repro.obs.metrics import default_registry
+
+    rej = default_registry().counter("tune.contracts.rejected")
+    before = rej.value
+    bad = TuneConfig("morton", 4096, 4096, 4096)
+    res = autotune(512, 512, 512, measure=False, refresh=True,
+                   cache=tune_cache,
+                   candidates=[bad, TuneConfig("xla")])
+    assert res.config.schedule == "xla"
+    assert all(e.config.kernel_config() != bad for e in res.estimates)
+    assert rej.value == before + 1

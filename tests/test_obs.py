@@ -214,9 +214,8 @@ def test_trace_cli_round_trip(tmp_path):
 
 def test_disabled_tracer_records_nothing():
     tr = Tracer(enabled=False)
-    with tr.span("a"):
-        with tr.span("b"):
-            pass
+    with tr.span("a"), tr.span("b"):
+        pass
     tr.begin_async("request", 0)
     tr.end_async("request", 0)
     tr.instant("i")
@@ -231,9 +230,9 @@ def test_energy_attribution_lands_on_innermost_span():
     rep = EnergyReport(backend="test")
     tr = Tracer(enabled=True)
     with tr.span("phase") as args:
-        with EnergyMeter("outer", reporter=rep):
-            with EnergyMeter("inner", reporter=rep):
-                np.dot(np.ones((64, 64)), np.ones((64, 64)))
+        with EnergyMeter("outer", reporter=rep), \
+                EnergyMeter("inner", reporter=rep):
+            np.dot(np.ones((64, 64)), np.ones((64, 64)))
         with EnergyMeter("second", reporter=rep):
             pass
     assert args["joules"] == pytest.approx(rep.totals()["joules"])

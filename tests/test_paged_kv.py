@@ -356,3 +356,65 @@ def test_attn_and_mlp_shapes_resolve_different_f_scale(tmp_path,
     f_mlp = resolved_f_scale(2048, 2048, 2048, cache=cache,
                              objective="energy")
     assert f_attn < f_mlp, (f_attn, f_mlp)
+
+
+# ---------------------------------------------- corruption detection ------
+def test_invariants_name_negative_refcount():
+    """check_invariants must fail loudly (RuntimeError naming the page)
+    on a corrupted allocator, not serve another request's KV rows."""
+    a = PageAllocator(num_pages=4, page_size=4, slots=2)
+    (pid,) = a.ensure_range(0, 4)
+    a.check_invariants()                      # clean state passes
+    a.ref[pid] = -2                           # simulated corruption
+    with pytest.raises(RuntimeError, match=f"page {pid}: negative"):
+        a.check_invariants()
+
+
+def test_invariants_name_orphaned_page():
+    a = PageAllocator(num_pages=4, page_size=4, slots=2)
+    a.ensure_range(0, 4)
+    pid = a._free[-1]                         # a free page...
+    a._free.remove(pid)                       # ...leaks out of the pool
+    with pytest.raises(RuntimeError, match=f"page {pid}: orphaned"):
+        a.check_invariants()
+
+
+def test_invariants_name_double_freed_page():
+    """A forged second release of the same page (the classic
+    use-after-free precursor) lands it on the free list twice."""
+    a = PageAllocator(num_pages=4, page_size=4, slots=2)
+    (pid,) = a.ensure_range(0, 4)
+    a.release(0)
+    # forge the state release() just cleared, then release again
+    a.block_table[0, 0] = pid
+    a.ref[pid] = 1
+    a.seq_lens[0] = 4
+    a.release(0)
+    with pytest.raises(RuntimeError, match=f"page {pid}: double-free"):
+        a.check_invariants()
+
+
+def test_invariants_name_free_but_still_mapped_page():
+    a = PageAllocator(num_pages=4, page_size=4, slots=2)
+    (pid,) = a.ensure_range(0, 4)
+    a._free.append(pid)                       # freed while still mapped
+    with pytest.raises(RuntimeError,
+                       match=f"page {pid}: on a free pool"):
+        a.check_invariants()
+
+
+def test_invariants_catch_evicted_cached_page():
+    """PrefixIndex.evict of a page still parked on the cached-free list
+    strands it: unreachable for prefix reuse, yet never scrubbed back to
+    the plain pool.  The audit must name it."""
+    a = PageAllocator(num_pages=4, page_size=4, slots=2,
+                      prefix_sharing=True)
+    a.ensure_range(0, 8)
+    a.register_prefix(0, list(range(8)))
+    a.release(0)
+    assert a._free_cached and a.check_invariants() is None
+    pid = a._free_cached[0]
+    a.index.evict(pid)                        # out-of-band eviction
+    with pytest.raises(RuntimeError,
+                       match=f"page {pid}: on the cached-free list"):
+        a.check_invariants()

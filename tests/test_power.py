@@ -201,9 +201,9 @@ def test_meter_nesting_builds_tree():
     with EnergyMeter("outer", backend=b, reporter=rep) as outer:
         with EnergyMeter("inner-1", backend=b):
             pass
-        with EnergyMeter("inner-2", backend=b) as i2:
-            with EnergyMeter("leaf", backend=b):
-                pass
+        with EnergyMeter("inner-2", backend=b) as i2, \
+                EnergyMeter("leaf", backend=b):
+            pass
     r = outer.reading
     assert [c.label for c in r.children] == ["inner-1", "inner-2"]
     assert [c.label for c in i2.reading.children] == ["leaf"]
@@ -370,7 +370,7 @@ def test_sfc_matmul_auto_with_objective(tune_cache):
     out = np.asarray(sfc_matmul(a, b, schedule="auto", objective="edp"))
     np.testing.assert_allclose(out, np.asarray(a @ b), rtol=1e-4, atol=1e-4)
     # the edp resolution landed in its own cache bucket
-    assert any(k.endswith("/obj=edp") for k in tune_cache.keys())
+    assert any(k.endswith("/obj=edp") for k in tune_cache)
 
 
 def test_dot_engine_objective_roundtrip(tune_cache):
@@ -384,7 +384,7 @@ def test_dot_engine_objective_roundtrip(tune_cache):
     np.testing.assert_allclose(
         np.asarray(y), np.asarray(jnp.einsum("...d,df->...f", x, w)),
         rtol=1e-4, atol=1e-4)
-    assert any("obj=energy" in k for k in tune_cache.keys())
+    assert any("obj=energy" in k for k in tune_cache)
 
 
 # -------------------------------------------- real counters (auto-skipped)

@@ -109,7 +109,7 @@ def test_checkpoint_detects_corruption():
         arr = np.load(fn)
         arr[0] = 123.0
         np.save(fn, arr)
-        with pytest.raises(IOError, match="corruption"):
+        with pytest.raises(OSError, match="corruption"):
             load_checkpoint(d, 1, tree)
 
 
