@@ -1,0 +1,142 @@
+"""Fault-tolerance cost model (DESIGN.md §14).
+
+Two row families:
+
+* ``serve_step`` -- the steady-state tax CI asserts: per-step wall time
+  of the continuous paged ``ServeLoop`` with the in-loop guards (NaN
+  scan, deadline watchdog, launch-fault classification) on vs off.
+  Measured on ONE loop instance by toggling the mirrored ``guards`` /
+  ``deadline_ms`` attributes between reps (same jit cache, same
+  allocator), median of paired back-to-back differences -- the
+  ``overhead`` row derives ``overhead_pct``, asserted < 3% in CI.
+* ``recovery`` -- what an actual fault costs once it happens: serve
+  snapshot capture, snapshot restore (device re-upload + allocator
+  rebuild + invariant audit), and engaging the sticky XLA kernel
+  fallback (mark + retrace).  Latency rows, not gated -- recovery is
+  off the steady-state path by construction.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.models import init_model
+from repro.obs import MetricsRegistry, Tracer
+from repro.serve import ServeConfig
+
+from .common import pick
+
+
+def _mk_loop(*, slots: int, cache_len: int, deadline_ms=None):
+    from repro.launch.serve import ServeLoop
+    cfg = get_smoke_config("qwen3_1_7b")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    sc = ServeConfig(slots=slots, cache_len=cache_len, layout="paged",
+                     mode="continuous", prefill_budget=16,
+                     latency_slo_ms=50.0, deadline_ms=deadline_ms)
+    loop = ServeLoop(cfg, params, sc,
+                     metrics=MetricsRegistry(enabled=False),
+                     tracer=Tracer(enabled=False))
+    return cfg, loop
+
+
+def _serve_step_us(*, slots: int, cache_len: int, max_new: int,
+                   reps: int) -> tuple[float, float, float]:
+    """Per-step wall time, guards on vs off, on ONE loop instance
+    (``guards``/``deadline_ms`` are mirrored as mutable attributes for
+    exactly this toggle): same jit cache, same allocator.  The
+    estimator mirrors ``bench_obs_overhead`` -- median of paired
+    back-to-back differences with alternating order, min-of-reps per
+    mode for the absolute rows."""
+    cfg, loop = _mk_loop(slots=slots, cache_len=cache_len)
+    rng = np.random.default_rng(0)
+    req = iter(range(10_000))
+    for _ in range(2):                       # warm-up: pays compilation
+        loop.submit(next(req), rng.integers(2, cfg.vocab, size=8).tolist())
+    loop.run(max_new=max_new)
+    samples = {True: [], False: []}
+    for rep in range(reps):
+        order = (True, False) if rep % 2 == 0 else (False, True)
+        for guards in order:
+            loop.guards = guards
+            loop.deadline_ms = 60_000.0 if guards else None
+            n0 = len(loop.prefill_tokens_per_step)
+            for _ in range(2):
+                loop.submit(next(req),
+                            rng.integers(2, cfg.vocab, size=8).tolist())
+            t0 = time.perf_counter()
+            loop.run(max_new=max_new)
+            dt = time.perf_counter() - t0
+            steps = len(loop.prefill_tokens_per_step) - n0
+            samples[guards].append(dt / max(steps, 1) * 1e6)
+    diff = float(np.median([a - b for a, b in
+                            zip(samples[True], samples[False])]))
+    return min(samples[True]), min(samples[False]), diff
+
+
+def _recovery_rows(*, slots: int, cache_len: int, max_new: int):
+    """Latency of the recovery paths themselves, measured on a live
+    mid-flight loop: snapshot capture, restore (re-upload + allocator
+    rebuild + ``check_invariants``), and kernel-fallback engagement
+    (sticky mark + jit rebuild + one retraced step)."""
+    from repro.kernels import paged_attention as pa
+    from repro.runtime import ServeSnapshotter
+    cfg, loop = _mk_loop(slots=slots, cache_len=cache_len)
+    rng = np.random.default_rng(0)
+    for r in range(4):
+        loop.submit(r, rng.integers(2, cfg.vocab, size=8).tolist())
+    loop.run(max_new=max_new)                # warm jits
+    for r in range(4, 4 + slots * 2):        # leave the loop mid-flight
+        loop.submit(r, rng.integers(2, cfg.vocab, size=8).tolist())
+    for _ in range(3):
+        loop._run_iteration(max_new=max_new)
+    snap = ServeSnapshotter(loop, every=1)
+    snap.snapshot(0)
+    snap_ms = []
+    restore_ms = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        snap.snapshot(0)
+        snap_ms.append((time.perf_counter() - t0) * 1e3)
+        t0 = time.perf_counter()
+        snap.restore()
+        restore_ms.append((time.perf_counter() - t0) * 1e3)
+    t0 = time.perf_counter()
+    loop._engage_kernel_fallback("bench")    # mark + rebuild jits
+    loop._run_iteration(max_new=max_new)     # pays the retrace
+    fallback_ms = (time.perf_counter() - t0) * 1e3
+    pa.reset_fallback()
+    return [
+        ("fault_tolerance/recovery/snapshot",
+         float(np.median(snap_ms)) * 1e3,
+         "ms_scale=1e3;host copy of DecodeState+alloc+sched"),
+        ("fault_tolerance/recovery/restore",
+         float(np.median(restore_ms)) * 1e3,
+         "ms_scale=1e3;re-upload+invariant audit"),
+        ("fault_tolerance/recovery/kernel_fallback",
+         fallback_ms * 1e3,
+         "ms_scale=1e3;sticky mark+retrace+1 step"),
+    ]
+
+
+def run():
+    slots, cache_len, max_new, reps = pick((4, 128, 4, 150),
+                                           (2, 64, 2, 120))
+    on, off, diff = _serve_step_us(slots=slots, cache_len=cache_len,
+                                   max_new=max_new, reps=reps)
+    pct = diff / off * 100.0
+    rows = [
+        ("fault_tolerance/serve_step/enabled", on,
+         "guards+deadline watchdog on"),
+        ("fault_tolerance/serve_step/disabled", off,
+         "fault_guards=False baseline"),
+        ("fault_tolerance/serve_step/overhead", max(diff, 0.0),
+         f"overhead_pct={pct:.2f}"),
+    ]
+    rows += _recovery_rows(slots=slots, cache_len=cache_len,
+                           max_new=max_new)
+    return rows

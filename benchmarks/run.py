@@ -34,8 +34,11 @@ import time
 # costs + enabled-vs-disabled serve-step overhead, asserted < 5% in CI);
 # 7 adds the static-analysis drift rows (bench_analysis_drift:
 # stack-distance-vs-cost-model byte drift per schedule, model-vs-HLO
-# byte parity, tune.drift.time_ratio median)
-SCHEMA_VERSION = 7
+# byte parity, tune.drift.time_ratio median);
+# 8 adds the fault-tolerance rows (bench_fault_tolerance: guards-on vs
+# guards-off serve-step overhead, asserted < 3% in CI, plus recovery
+# latencies for snapshot capture/restore and the XLA kernel fallback)
+SCHEMA_VERSION = 8
 
 MODULES = [
     "bench_exec_time",        # Table IV
@@ -55,6 +58,7 @@ MODULES = [
     "bench_prefix_sharing",   # DESIGN.md §11: COW prefix-sharing capacity
     "bench_obs_overhead",     # DESIGN.md §12: metrics/span layer overhead
     "bench_analysis_drift",   # DESIGN.md §13: static-vs-model drift rows
+    "bench_fault_tolerance",  # DESIGN.md §14: guard overhead + recovery
 ]
 
 

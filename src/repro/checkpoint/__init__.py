@@ -1,5 +1,6 @@
 from .store import (  # noqa: F401
     AsyncCheckpointer,
+    CheckpointCorruptionError,
     latest_step,
     load_checkpoint,
     restore_with_shardings,

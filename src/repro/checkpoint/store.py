@@ -30,9 +30,18 @@ import numpy as np
 import jax
 
 __all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
-           "restore_with_shardings", "AsyncCheckpointer"]
+           "restore_with_shardings", "AsyncCheckpointer",
+           "CheckpointCorruptionError"]
 
 _SEP = "__"
+
+
+class CheckpointCorruptionError(OSError):
+    """A checkpoint on disk fails its integrity checks: per-leaf crc32
+    mismatch, unreadable/truncated ``.npy``, shape drift against the
+    manifest, an unreadable manifest, or missing leaves.  Subclasses
+    ``OSError`` so pre-existing ``except OSError`` recovery paths keep
+    treating it as a bad checkpoint -- never deserialized into state."""
 
 
 def _flatten(tree, materialize: bool = True):
@@ -92,17 +101,43 @@ def latest_step(root: str) -> int | None:
 
 
 def load_checkpoint(root: str, step: int, like_tree) -> tuple:
-    """Returns (tree shaped like ``like_tree``, manifest meta)."""
+    """Returns (tree shaped like ``like_tree``, manifest meta).
+
+    Every leaf is integrity-checked against the manifest (crc32 over the
+    raw bytes, written at save time) before anything is handed back:
+    truncated or bit-flipped files raise
+    :class:`CheckpointCorruptionError` instead of deserializing garbage
+    into model state."""
     path = os.path.join(root, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except FileNotFoundError:
+        raise  # no checkpoint at all: not corruption
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptionError(
+            f"unreadable manifest @ step {step}: {e}") from e
     flat_like, treedef = _flatten(like_tree, materialize=False)
     leaves = {}
     for key, info in manifest["leaves"].items():
-        arr = np.load(os.path.join(path, key + ".npy"))
+        try:
+            arr = np.load(os.path.join(path, key + ".npy"))
+        except FileNotFoundError as e:
+            raise CheckpointCorruptionError(
+                f"checkpoint leaf {key} missing @ step {step}") from e
+        except (OSError, ValueError, EOFError) as e:
+            raise CheckpointCorruptionError(
+                f"checkpoint leaf {key} unreadable (truncated?) "
+                f"@ step {step}: {e}") from e
         crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
         if crc != info["crc32"]:
-            raise OSError(f"checkpoint corruption in {key} @ step {step}")
+            raise CheckpointCorruptionError(
+                f"checkpoint corruption in {key} @ step {step} "
+                f"(crc32 {crc} != manifest {info['crc32']})")
+        if list(arr.shape) != list(info["shape"]):
+            raise CheckpointCorruptionError(
+                f"checkpoint leaf {key} shape {list(arr.shape)} != "
+                f"manifest {info['shape']} @ step {step}")
         want = info["dtype"]
         if str(arr.dtype) != want:  # restore logical dtype (e.g. bfloat16)
             import ml_dtypes  # noqa: F401  (registers the dtypes)
@@ -110,7 +145,8 @@ def load_checkpoint(root: str, step: int, like_tree) -> tuple:
         leaves[key] = arr
     missing = set(flat_like) - set(leaves)
     if missing:
-        raise OSError(f"checkpoint missing leaves: {sorted(missing)[:5]}")
+        raise CheckpointCorruptionError(
+            f"checkpoint missing leaves: {sorted(missing)[:5]}")
     ordered = [leaves[k] for k in flat_like]  # dict order == flatten order
     tree = jax.tree_util.tree_unflatten(treedef, ordered)
     return tree, manifest["meta"]

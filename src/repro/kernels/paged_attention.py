@@ -35,8 +35,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
 from repro.kernels.ref import paged_decode_attention_ref
+from repro.runtime.chaos import fire as _chaos_fire
 
-__all__ = ["paged_decode_attention", "paged_decode_attention_pallas"]
+__all__ = ["paged_decode_attention", "paged_decode_attention_pallas",
+           "FALLBACK_EVENTS", "fallback_key", "mark_fallback",
+           "fallback_active", "reset_fallback"]
 
 
 def _paged_attn_kernel(tab_ref, meta_ref, q_ref, k_ref, v_ref, o_ref,
@@ -146,15 +149,62 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, phys_tables,
       q, k_pages, v_pages)
 
 
+# Graceful degradation (DESIGN.md §14): shapes whose Pallas build has
+# faulted fall back to the XLA reference *stickily* -- the fault is paid
+# once per shape, every later trace of that shape dispatches straight to
+# ref.  Metered: every engagement is recorded on FALLBACK_EVENTS so the
+# serve loop (serve.degraded) and tests can see exactly what degraded
+# and why.  Keyed per shape because a lowering fault is a property of
+# the (batch, heads, head-dim, page geometry) tuple, not of the process.
+_FALLBACK: set[tuple] = set()
+FALLBACK_EVENTS: list[dict] = []
+
+
+def fallback_key(b: int, h: int, dh: int, page_size: int,
+                 max_pages: int) -> tuple:
+    return (int(b), int(h), int(dh), int(page_size), int(max_pages))
+
+
+def mark_fallback(key: tuple, reason: str = "launch-fault") -> None:
+    if key not in _FALLBACK:
+        _FALLBACK.add(key)
+        FALLBACK_EVENTS.append({"key": key, "reason": reason})
+
+
+def fallback_active(key: tuple) -> bool:
+    return key in _FALLBACK
+
+
+def reset_fallback() -> None:
+    _FALLBACK.clear()
+    FALLBACK_EVENTS.clear()
+
+
 def paged_decode_attention(q, k_pages, v_pages, phys_tables, cur_pos, *,
                            interpret: bool | None = None,
                            force_pallas: bool = False):
     """Backend dispatch mirroring ``repro.kernels.ops``: Pallas on TPU
     (or ``interpret=True``), the XLA gather reference otherwise -- both
-    produce the same f32 math, so callers never branch on backend."""
-    if force_pallas or interpret or jax.default_backend() == "tpu":
-        return paged_decode_attention_pallas(
-            q, k_pages, v_pages, phys_tables, cur_pos,
-            interpret=bool(interpret))
+    produce the same f32 math, so callers never branch on backend.
+
+    A Pallas build fault (or an injected ``kernel`` chaos event) marks
+    this shape's sticky fallback and degrades to the reference instead
+    of propagating: wrong-but-up is never on the menu -- ref computes
+    identical math -- but slow-and-correct beats down.  Runtime launch
+    faults surface inside jit where this host-side dispatch cannot
+    catch them; the serve loop catches those, calls
+    :func:`mark_fallback` and retraces (DESIGN.md §14)."""
+    key = fallback_key(q.shape[0], q.shape[1], q.shape[2],
+                       k_pages.shape[1], phys_tables.shape[1])
+    want_pallas = bool(force_pallas or interpret
+                       or jax.default_backend() == "tpu")
+    if want_pallas and not fallback_active(key):
+        try:
+            _chaos_fire("kernel")
+            return paged_decode_attention_pallas(
+                q, k_pages, v_pages, phys_tables, cur_pos,
+                interpret=bool(interpret))
+        except Exception as e:  # noqa: BLE001 -- degrade, metered
+            mark_fallback(key, reason=repr(e))
     return paged_decode_attention_ref(
         q, k_pages, v_pages, phys_tables, cur_pos)

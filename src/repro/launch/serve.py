@@ -49,6 +49,10 @@ from repro.obs import MetricsRegistry, Tracer, default_registry, \
     default_tracer, null_registry
 from repro.power import EnergyMeter, EnergyReport, WorkloadHints, \
     detect_backend
+from repro.runtime import ChaosInjector, InjectedFault, \
+    ServeSnapshotter, StragglerMonitor, TransientFault, \
+    parse_chaos_spec
+from repro.runtime import chaos as _chaos
 from repro.serve import KVLayout, ServeConfig
 from repro.tune.cost import AttnSpec, attn_decode_bytes
 
@@ -64,6 +68,7 @@ class ServeLoop:
                  engine: DotEngine | None = None, power_backend=None,
                  metrics: MetricsRegistry | None = None,
                  tracer: Tracer | None = None,
+                 chaos: ChaosInjector | str | None = None,
                  **legacy):
         if legacy:
             bad = set(legacy) - _LEGACY_KW
@@ -253,6 +258,39 @@ class ServeLoop:
         self.g_share.set(1.0)
         self._tok_flops = 2.0 * sum(
             int(p.size) for p in jax.tree.leaves(params))
+        # --- fault tolerance (DESIGN.md §14) -------------------------------
+        # guards/deadline mirrored as attributes so the fault-tolerance
+        # bench can toggle them on one loop instance (same jit cache)
+        self.guards = sc.fault_guards
+        self.deadline_ms = sc.deadline_ms
+        self.errors: dict[int, str] = {}
+        # requests whose retirement already hit the metrics/spans: a
+        # snapshot restore can rewind a finished request into flight, so
+        # its replayed retirement must not double-count
+        self._finished: set[int] = set()
+        self._iter = 0
+        self._kernel_degraded = False
+        self.straggler = StragglerMonitor()
+        if chaos is None:
+            chaos = sc.chaos
+        if isinstance(chaos, str):
+            chaos = parse_chaos_spec(chaos, seed=sc.seed)
+        self.chaos = chaos
+        # chaos runs need restore-and-replay to always be possible: an
+        # injected fault mid-iteration leaves half-applied scheduler
+        # state that only a rewind repairs -- default to snapshotting
+        # every iteration unless the caller chose a cadence
+        every = sc.snapshot_every or (1 if self.chaos is not None
+                                      else None)
+        self.snapshotter = ServeSnapshotter(
+            self, every=every, root=sc.snapshot_dir) if every else None
+        self._build_jits()
+
+    def _build_jits(self) -> None:
+        """(Re)build the jitted step wrappers.  Called again after a
+        kernel-fault degradation: the fresh wrappers retrace, and the
+        retrace dispatches through the now-sticky XLA fallback."""
+        cfg = self.cfg
         self._step = jax.jit(
             lambda p, s, t, pos, mask: decode_step(
                 p, cfg, s, t, pos, self.engine, row_mask=mask))
@@ -285,6 +323,24 @@ class ServeLoop:
         self.g_occ = m.gauge("serve.pool.occupancy")
         self.g_hit_ratio = m.gauge("serve.prefix.hit_ratio")
         self.g_share = m.gauge("serve.attn.min_share")
+        # fault tolerance (DESIGN.md §14)
+        self.c_failed = m.counter("serve.requests.failed")
+        self.c_shed = m.counter("serve.shed")
+        self.c_retries = m.counter("serve.retries")
+        self.c_restores = m.counter("serve.restores")
+        self.c_degraded = m.counter("serve.degraded")
+        self.h_restore_ms = m.histogram("serve.restore_ms")
+        self._fault_counters: dict[str, object] = {}
+
+    def _fault(self, point: str, **args) -> None:
+        """Meter one observed/injected fault at ``point``: a
+        ``serve.faults.<point>`` counter plus an instant trace event."""
+        c = self._fault_counters.get(point)
+        if c is None:
+            c = self.metrics.counter(f"serve.faults.{point}")
+            self._fault_counters[point] = c
+        c.inc()
+        self.tracer.instant(f"serve.faults.{point}", **args)
 
     # -------------------------------------------------- tuner feedback ----
     def _resolve_attn_f(self, share: float = 1.0) -> float:
@@ -336,39 +392,76 @@ class ServeLoop:
         if phase:
             self.tracer.begin_async(f"request.{phase}", req_id)
 
-    def _finish_request(self, req_id: int) -> None:
+    def _finish_request(self, req_id: int,
+                        error: str | None = None) -> None:
         """Retirement accounting: TTFT / TPOT / e2e histograms, SLO
         attainment against ``config.latency_slo_ms`` (TTFT target), and
-        the request's enclosing async span closed with its totals."""
+        the request's enclosing async span closed with its totals.
+        ``error`` retires a *failed* request (NaN quarantine, deadline,
+        shed): it counts on ``serve.requests.failed`` and skips the
+        latency/SLO accounting.  A snapshot restore can rewind a
+        finished request back into flight; its replayed retirement is
+        detected via ``_finished`` and left out of metrics + spans."""
+        repeat = req_id in self._finished
+        self._finished.add(req_id)
         now = time.monotonic()
         self.finish_s[req_id] = now
-        self.c_finished.inc()
-        arr = self.arrival_s.get(req_id)
-        first = self.first_token_s.get(req_id)
         n_out = self.request_emitted.get(req_id, 0)
-        ttft = tpot = None
-        if arr is not None and first is not None:
-            ttft = (first - arr) * 1e3
-            self.request_ttft_ms[req_id] = ttft
-            self.m_ttft.observe(ttft)
-            e2e = (now - arr) * 1e3
-            self.request_e2e_ms[req_id] = e2e
-            self.m_e2e.observe(e2e)
-        if first is not None and n_out > 1:
-            tpot = (now - first) * 1e3 / (n_out - 1)
-            self.request_tpot_ms[req_id] = tpot
-            self.m_tpot.observe(tpot)
-        slo = self.config.latency_slo_ms
-        slo_ok = None
-        if slo is not None and ttft is not None:
-            slo_ok = bool(ttft <= slo)
-            self.request_slo_ok[req_id] = slo_ok
-            (self.c_slo_met if slo_ok else self.c_slo_violation).inc()
+        ttft = tpot = slo_ok = None
+        if repeat:
+            pass           # replayed retirement: no double accounting
+        elif error is not None:
+            self.c_failed.inc()
+        else:
+            self.c_finished.inc()
+            arr = self.arrival_s.get(req_id)
+            first = self.first_token_s.get(req_id)
+            if arr is not None and first is not None:
+                ttft = (first - arr) * 1e3
+                self.request_ttft_ms[req_id] = ttft
+                self.m_ttft.observe(ttft)
+                e2e = (now - arr) * 1e3
+                self.request_e2e_ms[req_id] = e2e
+                self.m_e2e.observe(e2e)
+            if first is not None and n_out > 1:
+                tpot = (now - first) * 1e3 / (n_out - 1)
+                self.request_tpot_ms[req_id] = tpot
+                self.m_tpot.observe(tpot)
+            slo = self.config.latency_slo_ms
+            if slo is not None and ttft is not None:
+                slo_ok = bool(ttft <= slo)
+                self.request_slo_ok[req_id] = slo_ok
+                (self.c_slo_met if slo_ok else self.c_slo_violation).inc()
         self._set_phase(req_id, None)
-        self.tracer.end_async(
-            "request", req_id, tokens=n_out,
-            joules=self.request_joules.get(req_id, 0.0),
-            ttft_ms=ttft, tpot_ms=tpot, slo_ok=slo_ok)
+        if not repeat:
+            self.tracer.end_async(
+                "request", req_id, tokens=n_out,
+                joules=self.request_joules.get(req_id, 0.0),
+                ttft_ms=ttft, tpot_ms=tpot, slo_ok=slo_ok,
+                error=error)
+
+    def _finish_error(self, req_id: int, reason: str) -> None:
+        """Finish a request *with an error* instead of requeueing it:
+        the caller has already detached it from any slot/queue."""
+        self.errors[req_id] = reason
+        self.tracer.instant("serve.request.failed", req=req_id,
+                            reason=reason)
+        self._finish_request(req_id, error=reason)
+
+    def _fail_slot(self, slot: int, reason: str) -> None:
+        """Evict a busy slot's request and finish it with ``reason``
+        (NaN quarantine / deadline): deactivate, drop prefill state,
+        release its page references, retire with an error -- co-resident
+        slots never notice."""
+        req = self.slot_req[slot]
+        self.active[slot] = False
+        self._prefill_len[slot] = -1
+        self._prefill_done[slot] = 0
+        self._slot_prompt[slot] = None
+        if self.paged:
+            self.alloc.release(slot)
+            self._sync_tables()
+        self._finish_error(req, reason)
 
     def _pump_gauges(self) -> None:
         """Per-step gauge refresh: queue depth, page-pool occupancy,
@@ -514,7 +607,6 @@ class ServeLoop:
             return False
         victim = max(cands, key=lambda s: self._admit_seq[s])
         req = self.slot_req[victim]
-        self.queue.insert(0, (req, list(self.out[req])))
         self.active[victim] = False
         self._prefill_len[victim] = -1
         self._prefill_done[victim] = 0
@@ -524,8 +616,70 @@ class ServeLoop:
         self.preemptions += 1
         self.c_preempt.inc()
         self.tracer.instant("serve.preempt", req=req, needer=needer)
-        self._set_phase(req, "queued")
+        # a victim preempted *past its deadline* must not rejoin the
+        # queue to be readmitted and re-prefilled (it can never meet its
+        # deadline again) -- finish it with an error instead, freeing
+        # its pages for the needer (DESIGN.md §14)
+        if self._deadline_expired(req, time.monotonic()):
+            self._fault("deadline", req=req)
+            self._finish_error(req, "deadline")
+        else:
+            self.queue.insert(0, (req, list(self.out[req])))
+            self._set_phase(req, "queued")
         return True
+
+    # ------------------------------------------------- deadlines / shed --
+    def _deadline_expired(self, req_id: int, now: float) -> bool:
+        if self.deadline_ms is None:
+            return False
+        arr = self.arrival_s.get(req_id)
+        return arr is not None and (now - arr) * 1e3 > self.deadline_ms
+
+    def _enforce_deadlines(self) -> None:
+        """Step watchdog: fail every request past its per-request
+        deadline (``ServeConfig.deadline_ms`` on the arrival clock) --
+        queued requests drop out of the queue, busy slots are evicted
+        via :meth:`_fail_slot`.  Runs at the top of every scheduler
+        iteration, so a deadline is enforced within one step."""
+        if self.deadline_ms is None:
+            return
+        now = time.monotonic()
+        expired = [(r, p) for r, p in self.queue
+                   if self._deadline_expired(r, now)]
+        if expired:
+            self.queue = [(r, p) for r, p in self.queue
+                          if not self._deadline_expired(r, now)]
+            for r, _ in expired:
+                self._fault("deadline", req=r, where="queued")
+                self._finish_error(r, "deadline")
+        for s in range(self.slots):
+            busy = self.active[s] or self._prefill_len[s] >= 0
+            if busy and self._deadline_expired(self.slot_req[s], now):
+                self._fault("deadline", req=self.slot_req[s],
+                            where="slot")
+                self._fail_slot(s, "deadline")
+
+    def _should_shed(self) -> bool:
+        """Load-shedding watermark check (DESIGN.md §14): shed the
+        queue head when pool occupancy or the observed SLO-violation
+        rate crosses its configured watermark."""
+        sc = self.config
+        if sc.shed_occupancy is not None and self.paged \
+                and self.alloc.occupancy() >= sc.shed_occupancy:
+            return True
+        if sc.shed_violation_rate is not None and self.request_slo_ok:
+            viol = sum(1 for ok in self.request_slo_ok.values()
+                       if not ok)
+            if viol / len(self.request_slo_ok) >= sc.shed_violation_rate:
+                return True
+        return False
+
+    def _shed_queue(self) -> None:
+        while self.queue and self._should_shed():
+            req_id, _ = self.queue.pop(0)
+            self.c_shed.inc()
+            self.tracer.instant("serve.shed", req=req_id)
+            self._finish_error(req_id, "shed")
 
     # -------------------------------------------------------- scheduling --
     def submit(self, req_id: int, prompt: list[int],
@@ -548,6 +702,7 @@ class ServeLoop:
         """Lockstep admission: whole-prompt prefill at admission time
         (token-by-token through the decode step -- works for every
         family, including ssm/hybrid)."""
+        self._shed_queue()
         for slot in range(self.slots):
             if self.active[slot] or not self.queue:
                 continue
@@ -594,9 +749,15 @@ class ServeLoop:
                 for i, tok in enumerate(prompt):
                     toks = np.zeros((self.slots, 1), np.int32)
                     toks[slot, 0] = tok
-                    logits, self.state = self._step(
-                        self.params, self.state, jnp.asarray(toks),
-                        jnp.asarray(i, jnp.int32), jnp.asarray(mask))
+                    try:
+                        logits, self.state = self._step(
+                            self.params, self.state, jnp.asarray(toks),
+                            jnp.asarray(i, jnp.int32),
+                            jnp.asarray(mask))
+                    except TransientFault:
+                        raise
+                    except Exception as e:  # noqa: BLE001
+                        raise self._launch_fault(e) from e
             self.request_joules[req_id] = \
                 self.request_joules.get(req_id, 0.0) + em.reading.joules
             self.pos[slot] = len(prompt)
@@ -623,6 +784,7 @@ class ServeLoop:
         prefix index already holds, and leave the rest of the prompt to
         the chunked prefill stream."""
         from repro.serve.paged_kv import pages_needed
+        self._shed_queue()
         for slot in range(self.slots):
             if not self.queue:
                 break
@@ -753,9 +915,14 @@ class ServeLoop:
                              hbm_bytes=self._gemm_bytes_step,
                              gemm_bytes=self._gemm_bytes_step,
                              f_scale=self.f_scale)) as em:
-            self.state = self._chunk(self.params, self.state,
-                                     jnp.asarray(toks), jnp.asarray(sl),
-                                     jnp.asarray(st), jnp.asarray(ln))
+            try:
+                self.state = self._chunk(
+                    self.params, self.state, jnp.asarray(toks),
+                    jnp.asarray(sl), jnp.asarray(st), jnp.asarray(ln))
+            except TransientFault:
+                raise
+            except Exception as e:  # noqa: BLE001
+                raise self._launch_fault(e) from e
         # per-request attribution weighted by the prompt tokens each row
         # actually processed this chunk -- a gang sharing one reading
         # must not bill a 1-token tail row like a budget-filling row
@@ -794,6 +961,13 @@ class ServeLoop:
         the per-slot vector when the family allows it, the historical
         shared scalar (max over live slots) otherwise."""
         from repro.serve.paged_kv import PoolExhausted
+        if self.chaos is not None and self.chaos.match(
+                "kernel", step=self._iter) is not None:
+            # a runtime launch fault surfaces *inside* jit where the
+            # dispatch-level hook cannot fire (the trace ran once at
+            # compile time) -- injected here, recovered by the retry
+            # path engaging the sticky XLA fallback (DESIGN.md §14)
+            raise InjectedFault("kernel", f"step={self._iter}")
         scalar_pos = None if self._vector_pos \
             else int(self.pos[self.active].max())
         if self.paged:
@@ -838,10 +1012,15 @@ class ServeLoop:
                              attn_bytes=attn_bytes,
                              gemm_bytes=self._gemm_bytes_step,
                              f_scale=self.f_scale)) as em:
-            logits, self.state = self._step(
-                self.params, self.state, jnp.asarray(toks), pos_arg,
-                jnp.asarray(self.active))
-            logits = np.asarray(logits[:, 0], np.float32)
+            try:
+                logits, self.state = self._step(
+                    self.params, self.state, jnp.asarray(toks), pos_arg,
+                    jnp.asarray(self.active))
+                logits = np.asarray(logits[:, 0], np.float32)
+            except TransientFault:
+                raise
+            except Exception as e:  # noqa: BLE001 -- classified below
+                raise self._launch_fault(e) from e
         # token-weighted attribution degenerates to an even split here:
         # every active slot processed exactly one token this step
         # (prefill readings are weighted by their real token counts)
@@ -851,6 +1030,26 @@ class ServeLoop:
                 r = self.slot_req[s]
                 self.request_joules[r] = \
                     self.request_joules.get(r, 0.0) + j_per_req
+        # NaN/Inf quarantine (DESIGN.md §14): injected poisoning first,
+        # then the guard scan.  Only the offending slot's request is
+        # failed; co-resident slots sample normally this very step.
+        # Quarantine never raises: it runs after every retryable fault
+        # point in the iteration, so restore-and-replay cannot revive a
+        # request that was failed here.
+        if self.chaos is not None:
+            for s in range(self.slots):
+                if self.active[s] and self.chaos.match(
+                        "nan", step=self._iter,
+                        request=self.slot_req[s]) is not None:
+                    if not logits.flags.writeable:
+                        logits = np.array(logits)  # device views are RO
+                    logits[s, :] = np.nan
+        if self.guards:
+            finite = np.isfinite(logits).all(axis=1)
+            for s in range(self.slots):
+                if self.active[s] and not finite[s]:
+                    self._fault("nan", req=self.slot_req[s], slot=s)
+                    self._fail_slot(s, "nan")
         t_tok = time.monotonic()
         for s in range(self.slots):
             if not self.active[s]:
@@ -875,41 +1074,143 @@ class ServeLoop:
                     self.alloc.release(s)
                     self._sync_tables()
 
+    # --------------------------------------------- fault-tolerant loop ----
+    def _launch_fault(self, e: Exception) -> Exception:
+        """Classify a failure of a jitted step call: under fault guards
+        on a paged loop that has not yet degraded, treat it as a kernel
+        launch fault -- the retry path engages the sticky XLA fallback
+        and retraces.  Anything else (or a second failure *after*
+        degrading) is a genuine bug and propagates unchanged."""
+        if self.guards and self.paged and not self._kernel_degraded:
+            f = TransientFault(f"kernel launch fault: {e!r}")
+            f.point = "kernel"
+            return f
+        return e
+
+    def _engage_kernel_fallback(self, reason: str) -> None:
+        """Graceful degradation (DESIGN.md §14): mark this loop's
+        paged-attention shape for the sticky XLA reference fallback,
+        then rebuild the jitted wrappers so the retrace dispatches
+        through it.  One-way for the loop's lifetime; metered on
+        ``serve.degraded``."""
+        if self._kernel_degraded:
+            return
+        self._kernel_degraded = True
+        if self.paged:
+            from repro.kernels import paged_attention as pa
+            key = pa.fallback_key(
+                self.slots, self.cfg.n_heads, self.cfg.d_head,
+                self.page_size, self.alloc.max_pages_per_slot)
+            pa.mark_fallback(key, reason=reason)
+        self.c_degraded.inc()
+        self.tracer.instant("serve.degraded", reason=reason)
+        self._build_jits()
+
+    def _pending(self) -> bool:
+        if self.mode == "continuous":
+            return bool(self.queue or self.active.any()
+                        or (self._prefill_len >= 0).any())
+        return bool(self.queue or self.active.any())
+
+    def _iteration_body(self, max_new: int) -> None:
+        """One scheduler iteration under the ``serve.step`` span.
+        Within-iteration fault ordering (DESIGN.md §14): injected
+        step/straggler faults first, deadlines next, then admission
+        (alloc faults), prefill/decode (kernel faults), and the NaN
+        quarantine last -- every retryable point precedes the
+        unretryable quarantine, so a restore-and-replay can never
+        revive a request the quarantine already failed."""
+        tr = self.tracer
+        it = self._iter
+        if self.chaos is not None:
+            ev = self.chaos.match("straggler", step=it)
+            if ev is not None:
+                # counted at injection: the EMA watchdog needs warmup
+                # and cannot be relied on to flag an early delay
+                self._fault("straggler", step=it, seconds=ev.seconds)
+                time.sleep(ev.seconds)
+            self.chaos.check("step", step=it)
+        with tr.span("serve.step", mode=self.mode):
+            self._enforce_deadlines()
+            if self.mode == "continuous":
+                with tr.span("serve.admit"):
+                    self._admit_continuous()
+                with tr.span("serve.prefill_chunk"):
+                    n = self._prefill_step()
+                self.prefill_tokens_per_step.append(n)
+                if n:
+                    self.m_prefill_tok.observe(n)
+                if self.active.any():
+                    with tr.span("serve.decode"):
+                        self._decode_once(max_new)
+            else:
+                with tr.span("serve.admit"):
+                    self._admit()
+                if self.active.any():
+                    with tr.span("serve.decode"):
+                        self._decode_once(max_new)
+
+    def _recover(self, e: TransientFault, attempt: int) -> None:
+        """Retry path after a transient fault: engage the kernel
+        fallback when the fault was a launch fault, rewind to the last
+        snapshot (restore-and-replay), back off exponentially."""
+        if getattr(e, "point", None) == "kernel":
+            self._engage_kernel_fallback(repr(e))
+        if self.snapshotter is not None:
+            t0 = time.perf_counter()
+            with self.tracer.span("serve.restore", attempt=attempt,
+                                  error=repr(e)):
+                self.snapshotter.restore()
+            self.c_restores.inc()
+            self.h_restore_ms.observe(
+                (time.perf_counter() - t0) * 1e3)
+        back = self.config.retry_backoff_s
+        if back:
+            time.sleep(min(back * 2 ** (attempt - 1), 1.0))
+
+    def _run_iteration(self, max_new: int) -> None:
+        if self.snapshotter is not None:
+            self.snapshotter.maybe_snapshot(self._iter)
+        if self.chaos is not None:
+            _chaos.set_context(step=self._iter)
+        t0 = time.perf_counter()
+        attempt = 0
+        while True:
+            try:
+                self._iteration_body(max_new)
+                break
+            except TransientFault as e:
+                attempt += 1
+                point = getattr(e, "point", "step")
+                self._fault(point, error=repr(e), attempt=attempt)
+                self.c_retries.inc()
+                if attempt > self.config.max_step_retries:
+                    raise
+                self._recover(e, attempt)
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        self.m_step.observe(dt_ms)
+        # EMA step-time watchdog; the first iterations pay jit compile
+        # and would poison the EMA, so they are skipped
+        if self.guards and self._iter >= 2 \
+                and self.straggler.observe(self._iter, dt_ms / 1e3):
+            self._fault("straggler_detected", step=self._iter,
+                        ms=dt_ms)
+        self._pump_gauges()
+        self._iter += 1
+
     def run(self, max_new: int = 32) -> dict[int, list[int]]:
         """Decode until queue + slots drain (or max_new per request,
         tracked per request so a preempted sequence resumes its budget).
         Each scheduler iteration runs under a ``serve.step`` span with
         admit/prefill/decode children, feeds the step-latency histogram
-        and refreshes the occupancy gauges (DESIGN.md §12)."""
-        tr = self.tracer
-        if self.mode == "continuous":
-            while (self.queue or self.active.any()
-                   or (self._prefill_len >= 0).any()):
-                t0 = time.perf_counter()
-                with tr.span("serve.step", mode="continuous"):
-                    with tr.span("serve.admit"):
-                        self._admit_continuous()
-                    with tr.span("serve.prefill_chunk"):
-                        n = self._prefill_step()
-                    self.prefill_tokens_per_step.append(n)
-                    if n:
-                        self.m_prefill_tok.observe(n)
-                    if self.active.any():
-                        with tr.span("serve.decode"):
-                            self._decode_once(max_new)
-                self.m_step.observe((time.perf_counter() - t0) * 1e3)
-                self._pump_gauges()
-        else:
-            while self.queue or self.active.any():
-                t0 = time.perf_counter()
-                with tr.span("serve.step", mode="lockstep"):
-                    with tr.span("serve.admit"):
-                        self._admit()
-                    if self.active.any():
-                        with tr.span("serve.decode"):
-                            self._decode_once(max_new)
-                self.m_step.observe((time.perf_counter() - t0) * 1e3)
-                self._pump_gauges()
+        and refreshes the occupancy gauges (DESIGN.md §12).  Iterations
+        run under the fault-tolerance machinery (DESIGN.md §14):
+        snapshot on cadence, bounded retry with restore-and-replay on
+        :class:`TransientFault`, the chaos injector installed as this
+        thread's ambient fault source."""
+        with _chaos.install(self.chaos):
+            while self._pending():
+                self._run_iteration(max_new)
         self.energy.meta["latency"] = self.latency_summary()
         return self.out
 
@@ -971,6 +1272,34 @@ def main(argv=None):
                     help="route every GEMM through the autotuner "
                          "adjudicated on this metric (DESIGN.md §8); "
                          "default keeps the XLA engine")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline on the arrival clock; "
+                         "expired requests finish with an error "
+                         "(DESIGN.md §14)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="deterministic fault-injection schedule, e.g. "
+                         "'alloc@step=2,nan@step=3:req=1,"
+                         "straggler@step=4:delay=0.3' (DESIGN.md §14)")
+    ap.add_argument("--snapshot-every", type=int, default=None,
+                    help="serve-state snapshot cadence in scheduler "
+                         "iterations (default: 1 under --chaos, else "
+                         "off)")
+    ap.add_argument("--snapshot-dir", default=None, metavar="PATH",
+                    help="also persist snapshots to disk through the "
+                         "checkpoint store (default: in-memory only)")
+    ap.add_argument("--shed-occupancy", type=float, default=None,
+                    help="shed queued requests when page-pool occupancy "
+                         "crosses this watermark (0..1]")
+    ap.add_argument("--shed-violation-rate", type=float, default=None,
+                    help="shed queued requests when the observed SLO-"
+                         "violation rate crosses this watermark (0..1]")
+    ap.add_argument("--max-step-retries", type=int, default=2,
+                    help="bounded retries per scheduler iteration on a "
+                         "transient fault")
+    ap.add_argument("--no-fault-guards", action="store_true",
+                    help="disable the NaN quarantine + launch-fault "
+                         "classification (the guards-off baseline "
+                         "bench_fault_tolerance measures against)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -984,7 +1313,15 @@ def main(argv=None):
         page_size=args.page_size, num_pages=args.num_pages,
         mode=args.mode, prefill_budget=args.prefill_budget,
         prefix_sharing=not args.no_prefix_sharing,
-        latency_slo_ms=args.slo_ms, obs=not args.no_obs)
+        latency_slo_ms=args.slo_ms, obs=not args.no_obs,
+        fault_guards=not args.no_fault_guards,
+        deadline_ms=args.deadline_ms,
+        max_step_retries=args.max_step_retries,
+        snapshot_every=args.snapshot_every,
+        snapshot_dir=args.snapshot_dir,
+        shed_occupancy=args.shed_occupancy,
+        shed_violation_rate=args.shed_violation_rate,
+        chaos=args.chaos)
     tracer = None
     if args.trace and not args.no_obs:
         from repro.obs import set_default_tracer
@@ -1035,6 +1372,20 @@ def main(argv=None):
     print(f"[serve] fused epilogues (DESIGN.md §9): "
           f"~{loop.ep_saved_step / 1e6:.2f} MB/step HBM traffic "
           f"eliminated across {loop.slots} slots (modeled)")
+    if args.chaos or loop.errors or loop.snapshotter is not None:
+        snaps = loop.snapshotter.snapshots if loop.snapshotter else 0
+        rests = loop.snapshotter.restores if loop.snapshotter else 0
+        print(f"[serve] fault tolerance (DESIGN.md §14): "
+              f"{snaps} snapshots, {rests} restores, "
+              f"{len(loop.errors)} failed requests"
+              + (", kernel degraded to XLA fallback"
+                 if loop._kernel_degraded else ""))
+        for r, reason in sorted(loop.errors.items()):
+            print(f"  req {r}: failed ({reason})")
+        if loop.chaos is not None:
+            print(f"[serve] chaos: {len(loop.chaos.fired)} injected "
+                  f"faults {loop.chaos.fired}, schedule "
+                  f"{'exhausted' if loop.chaos.exhausted() else 'open'}")
     for r, toks in sorted(out.items()):
         print(f"  req {r}: {toks[:args.prompt_len]} -> "
               f"{toks[args.prompt_len:][:8]}... "

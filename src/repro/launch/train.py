@@ -234,7 +234,7 @@ def main(argv=None):
         return out
 
     executor = StepExecutor(one_step, restore, injector=injector,
-                            monitor=monitor)
+                            monitor=monitor, metrics=metrics)
     t0 = time.time()
     final_state, end_step = executor.run(state, start, args.steps)
     dt = time.time() - t0

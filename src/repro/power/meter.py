@@ -20,10 +20,22 @@ import time
 from dataclasses import dataclass, field
 
 from repro.obs.trace import attribute_energy
+from repro.runtime.chaos import fire as _chaos_fire
 
 from .backends import PowerBackend, WorkloadHints, detect_backend
 
 __all__ = ["EnergyReading", "EnergyMeter", "default_backend"]
+
+# sentinel token for an interval whose backend failed to *start* (dying
+# counter or an injected ``power`` chaos event): the interval still
+# times, reads zero joules, and never calls backend.stop -- graceful
+# degradation, metered on the ``power.faults`` counter (DESIGN.md §14)
+_START_FAILED = object()
+
+
+def _count_power_fault() -> None:
+    from repro.obs import default_registry
+    default_registry().counter("power.faults").inc()
 
 _DEFAULT_BACKEND: PowerBackend | None = None
 
@@ -118,7 +130,13 @@ class EnergyMeter:
 
     # ---------------------------------------------------------- ctx manager
     def __enter__(self) -> "EnergyMeter":
-        self._open.append([self.backend.start(), time.perf_counter(), []])
+        try:
+            _chaos_fire("power")
+            token = self.backend.start()
+        except Exception:  # degrade: meter the time, skip the joules
+            token = _START_FAILED
+            _count_power_fault()
+        self._open.append([token, time.perf_counter(), []])
         _active().append(self)
         return self
 
@@ -126,9 +144,11 @@ class EnergyMeter:
         token, t0, children = self._open.pop()
         elapsed = time.perf_counter() - t0
         try:
-            domains = self.backend.stop(token, elapsed, self.hints)
+            domains = {} if token is _START_FAILED else \
+                self.backend.stop(token, elapsed, self.hints)
         except Exception:  # a dying counter must not mask the real error
             domains = {}
+            _count_power_fault()
         primary = getattr(self.backend, "primary_domains", ()) or \
             tuple(domains)
         total = sum(domains.get(d, 0.0) for d in primary)

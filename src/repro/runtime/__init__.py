@@ -1,2 +1,10 @@
 from .fault import FailureInjector, StepExecutor, StragglerMonitor  # noqa: F401
 from .elastic import plan_elastic_mesh, reshard_tree  # noqa: F401
+from .chaos import (  # noqa: F401
+    ChaosEvent,
+    ChaosInjector,
+    InjectedFault,
+    TransientFault,
+    parse_chaos_spec,
+)
+from .snapshot import ServeSnapshotter  # noqa: F401

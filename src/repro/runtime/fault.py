@@ -71,15 +71,23 @@ class StepExecutor:
 
     def __init__(self, step_fn, restore_fn, max_retries: int = 2,
                  monitor: StragglerMonitor | None = None,
-                 injector: FailureInjector | None = None):
+                 injector: FailureInjector | None = None,
+                 metrics=None):
+        from repro.obs import default_registry
         self.step_fn = step_fn
         self.restore_fn = restore_fn
         self.max_retries = max_retries
         self.monitor = monitor or StragglerMonitor()
         self.injector = injector
         self.retries: list[tuple[int, str]] = []
+        # recovery is observable (DESIGN.md §14): a silent retry looks
+        # identical to a healthy run in every dashboard
+        m = metrics if metrics is not None else default_registry()
+        self._c_retries = m.counter("train.retries")
+        self._c_restores = m.counter("train.restores")
 
     def run(self, state, start_step: int, num_steps: int):
+        from repro.obs import trace_span
         step = start_step
         end = start_step + num_steps
         while step < end:
@@ -95,8 +103,12 @@ class StepExecutor:
                 except Exception as e:  # noqa: BLE001 -- retry any fault
                     attempts += 1
                     self.retries.append((step, repr(e)))
+                    self._c_retries.inc()
                     if attempts > self.max_retries:
                         raise
-                    state = self.restore_fn(step)
+                    with trace_span("train.restore", step=step,
+                                    attempt=attempts, error=repr(e)):
+                        state = self.restore_fn(step)
+                    self._c_restores.inc()
             step += 1
         return state, step

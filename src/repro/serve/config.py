@@ -40,6 +40,22 @@ class ServeConfig:
     TPOT / e2e latency is still recorded.  ``obs=False`` turns the
     whole metrics + span layer into no-ops (near-zero overhead,
     benchmarked in ``bench_obs_overhead``).
+
+    Fault tolerance (DESIGN.md §14): ``fault_guards`` arms the in-loop
+    guards (NaN/Inf logit quarantine, deadline watchdog, launch-fault
+    degradation); ``deadline_ms`` is the per-request end-to-end wall
+    budget from arrival -- an expired request finishes with an error
+    instead of occupying a slot.  ``max_step_retries`` bounds replays
+    of a transiently failed scheduler iteration (exponential backoff
+    from ``retry_backoff_s``); ``snapshot_every``/``snapshot_dir``
+    control the serve-state snapshot cadence and optional persistence
+    through ``checkpoint.store``.  ``shed_occupancy`` /
+    ``shed_violation_rate`` are load-shedding watermarks: while pool
+    occupancy or the SLO-violation rate sits at/above one, queued
+    admissions are rejected (finish-with-error, 429-style) instead of
+    admitted.  ``chaos`` is a fault-injection schedule string
+    (``repro.runtime.chaos.parse_chaos_spec``) for reproducible chaos
+    runs.
     """
 
     slots: int = 4
@@ -56,6 +72,15 @@ class ServeConfig:
     prefix_sharing: bool = True
     latency_slo_ms: float | None = None
     obs: bool = True
+    fault_guards: bool = True
+    deadline_ms: float | None = None
+    max_step_retries: int = 2
+    retry_backoff_s: float = 0.02
+    snapshot_every: int | None = None
+    snapshot_dir: str | None = None
+    shed_occupancy: float | None = None
+    shed_violation_rate: float | None = None
+    chaos: str | None = None
 
     def __post_init__(self):
         # normalise string layouts ("paged" from argparse) to the enum
@@ -74,6 +99,21 @@ class ServeConfig:
             raise ValueError(
                 f"latency_slo_ms must be > 0 (or None to disable SLO "
                 f"accounting), got {self.latency_slo_ms}")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be > 0 (or None to disable "
+                f"deadlines), got {self.deadline_ms}")
+        if self.max_step_retries < 0 or self.retry_backoff_s < 0:
+            raise ValueError(
+                (self.max_step_retries, self.retry_backoff_s))
+        if self.snapshot_every is not None and self.snapshot_every < 1:
+            raise ValueError(
+                f"snapshot_every must be >= 1, got {self.snapshot_every}")
+        for name in ("shed_occupancy", "shed_violation_rate"):
+            v = getattr(self, name)
+            if v is not None and not (0 < v <= 1):
+                raise ValueError(
+                    f"{name} must be a watermark in (0, 1], got {v}")
 
     @property
     def paged(self) -> bool:

@@ -26,6 +26,7 @@ from typing import Any
 import numpy as np
 
 from repro.core.schedule import grid_schedule
+from repro.runtime.chaos import fire as _chaos_fire
 
 __all__ = ["PageAllocator", "PoolExhausted", "PrefixIndex",
            "page_permutation", "init_paged_decode_state",
@@ -128,6 +129,43 @@ class PrefixIndex:
             children.pop(key, None)
         self._children.pop(int(pid), None)
 
+    # ---------------------------------------------------- serialization --
+    def edges(self) -> list[list]:
+        """The index as ``[parent_pid, key_tokens, pid]`` edges (parent
+        -1 at the root) -- JSON-native, the serve-snapshot format
+        (DESIGN.md §14)."""
+        parent_of = {id(self._root): -1}
+        for pid, children in self._children.items():
+            parent_of[id(children)] = pid
+        return [[parent_of[id(children)], list(key), int(pid)]
+                for pid, (children, key) in self._owner.items()]
+
+    @classmethod
+    def from_edges(cls, edges) -> "PrefixIndex":
+        """Rebuild from :meth:`edges`.  Insertion order is resolved by
+        fixpoint (a child edge waits for its parent); orphaned edges --
+        impossible for an index serialized by :meth:`edges` -- are
+        dropped rather than looping forever."""
+        ix = cls()
+        pending = [(int(parent), tuple(key), int(pid))
+                   for parent, key, pid in edges]
+        while pending:
+            rest = []
+            for parent, key, pid in pending:
+                if parent == -1:
+                    node = ix._root
+                elif parent in ix._owner:
+                    node = ix._children.setdefault(parent, {})
+                else:
+                    rest.append((parent, key, pid))
+                    continue
+                node[key] = pid
+                ix._owner[pid] = (node, key)
+            if len(rest) == len(pending):
+                break
+            pending = rest
+        return ix
+
 
 class PageAllocator:
     """Free-list page allocator with per-slot block tables (host-side).
@@ -218,6 +256,9 @@ class PageAllocator:
         """A fresh page id: the plain LIFO pool first (warm rows, the
         historical behaviour), then FIFO eviction from the prefix-cached
         pool -- the coldest cached page loses its index entry."""
+        # chaos point (DESIGN.md §14): fires BEFORE any mutation, so an
+        # injected allocation fault leaves the allocator consistent
+        _chaos_fire("alloc")
         if self._free:
             return self._free.pop()
         if self._free_cached:
@@ -433,6 +474,42 @@ class PageAllocator:
 
     def active_lengths(self) -> np.ndarray:
         return self.seq_lens.copy()
+
+    # ------------------------------------------------------- serialization --
+    def state_dict(self) -> dict:
+        """Complete allocator metadata as JSON-native values -- the
+        serve-snapshot format (DESIGN.md §14).  Free-list *order* is
+        preserved: replay after restore must hand out the same pages."""
+        return {
+            "free": [int(p) for p in self._free],
+            "free_cached": [int(p) for p in self._free_cached],
+            "block_table": self.block_table.tolist(),
+            "seq_lens": self.seq_lens.tolist(),
+            "ref": self.ref.tolist(),
+            "ever_freed": sorted(int(p) for p in self._ever_freed),
+            "stats": {k: int(v) for k, v in self.stats.items()},
+            "index": self.index.edges() if self.index is not None
+            else None,
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        """Restore :meth:`state_dict`.  Pool geometry (``num_pages``,
+        ``page_size``, table shape) is construction-time and must
+        already match; only the mutable metadata is replaced."""
+        table = np.asarray(d["block_table"], np.int32)
+        if table.shape != self.block_table.shape:
+            raise ValueError(
+                f"snapshot block table {table.shape} does not fit this "
+                f"allocator {self.block_table.shape}")
+        self._free = [int(p) for p in d["free"]]
+        self._free_cached = [int(p) for p in d["free_cached"]]
+        self.block_table = table
+        self.seq_lens = np.asarray(d["seq_lens"], np.int32)
+        self.ref = np.asarray(d["ref"], np.int32)
+        self._ever_freed = {int(p) for p in d["ever_freed"]}
+        self.stats = {k: int(v) for k, v in d["stats"].items()}
+        if self.prefix_sharing:
+            self.index = PrefixIndex.from_edges(d["index"] or [])
 
 
 def default_pool_pages(slots: int, cache_len: int,

@@ -1,0 +1,126 @@
+"""The runtime fault-tolerance control plane (DESIGN.md §14): the
+failure-injection schedule, the straggler EMA watchdog, StepExecutor's
+retry-from-checkpoint semantics (now observable on train.retries /
+train.restores), and the elastic re-mesh plan + reshard round trip --
+all host-side, fully exercised on CPU.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.obs import MetricsRegistry
+from repro.runtime import FailureInjector, StepExecutor, \
+    StragglerMonitor, plan_elastic_mesh, reshard_tree
+from repro.runtime.fault import InjectedFailure
+
+
+# ------------------------------------------------------ FailureInjector --
+def test_injector_fires_scheduled_steps_once():
+    inj = FailureInjector({2: "preemption", 5: "dma_timeout"})
+    inj.check(0)
+    inj.check(1)
+    with pytest.raises(InjectedFailure, match="preemption @ step 2"):
+        inj.check(2)
+    inj.check(2)  # consumed: the same step passes on retry
+    with pytest.raises(InjectedFailure, match="dma_timeout"):
+        inj.check(5)
+    assert inj.fired == [(2, "preemption"), (5, "dma_timeout")]
+
+
+# ----------------------------------------------------- StragglerMonitor --
+def test_straggler_flags_slow_step_after_warmup():
+    mon = StragglerMonitor(factor=3.0, warmup=3)
+    for step in range(3):
+        assert not mon.observe(step, 0.1)
+    assert not mon.observe(3, 0.11)       # near the EMA: healthy
+    assert mon.observe(4, 1.0)            # 10x the EMA: flagged
+    assert mon.events and mon.events[0][0] == 4
+    # a flagged step must not drag the EMA up (the straggler would
+    # otherwise normalise itself)
+    assert mon.ema < 0.2
+
+
+def test_straggler_quiet_during_warmup():
+    mon = StragglerMonitor(warmup=3)
+    assert not mon.observe(0, 0.1)
+    assert not mon.observe(1, 5.0)        # warmup: never flagged
+    assert mon.events == []
+
+
+# -------------------------------------------------------- StepExecutor --
+def _counting_step(fail_at: dict[int, int]):
+    """step_fn failing ``fail_at[step]`` times before succeeding."""
+    remaining = dict(fail_at)
+
+    def step_fn(state, step):
+        if remaining.get(step, 0) > 0:
+            remaining[step] -= 1
+            raise RuntimeError(f"boom @ {step}")
+        return state + 1
+    return step_fn
+
+
+def test_executor_retries_and_restores():
+    m = MetricsRegistry()
+    restores = []
+
+    def restore(step):
+        restores.append(step)
+        return step  # state == last completed step count
+
+    ex = StepExecutor(_counting_step({1: 2}), restore,
+                      max_retries=2, metrics=m)
+    state, step = ex.run(0, 0, 4)
+    assert (state, step) == (4, 4)
+    assert [s for s, _ in ex.retries] == [1, 1]
+    assert restores == [1, 1]
+    assert m.counter("train.retries").value == 2
+    assert m.counter("train.restores").value == 2
+
+
+def test_executor_gives_up_after_max_retries():
+    m = MetricsRegistry()
+    ex = StepExecutor(_counting_step({0: 99}), lambda step: 0,
+                      max_retries=2, metrics=m)
+    with pytest.raises(RuntimeError, match="boom"):
+        ex.run(0, 0, 1)
+    # the final attempt counts as a retry but is not restored from
+    assert m.counter("train.retries").value == 3
+    assert m.counter("train.restores").value == 2
+
+
+def test_executor_injected_failures_recover():
+    m = MetricsRegistry()
+    inj = FailureInjector({1: "preemption"})
+    ex = StepExecutor(lambda s, i: s + 1, lambda step: step,
+                      injector=inj, metrics=m)
+    state, step = ex.run(0, 0, 3)
+    assert (state, step) == (3, 3)
+    assert inj.fired == [(1, "preemption")]
+    assert m.counter("train.restores").value == 1
+
+
+# ------------------------------------------------------------- elastic --
+def test_plan_elastic_mesh_halves_data_axis():
+    sizes, scale = plan_elastic_mesh(("data", "model"), (8, 2),
+                                     failed_chips=4)
+    assert sizes == (4, 2)     # 12 survivors, largest pow2 data slice
+    assert scale == 2          # grad accumulation makes up throughput
+
+
+def test_plan_elastic_mesh_impossible_raises():
+    with pytest.raises(RuntimeError, match="surviving"):
+        plan_elastic_mesh(("data", "model"), (4, 4), failed_chips=14)
+
+
+def test_reshard_tree_round_trip():
+    from jax.sharding import Mesh
+    from jax.sharding import PartitionSpec as P
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    tree = {"w": np.arange(8, dtype=np.float32).reshape(4, 2),
+            "b": np.zeros(2, np.float32)}
+    spec = {"w": P(), "b": P()}
+    out = reshard_tree(tree, mesh, spec)
+    np.testing.assert_array_equal(np.asarray(out["w"]), tree["w"])
+    np.testing.assert_array_equal(np.asarray(out["b"]), tree["b"])
