@@ -1,0 +1,110 @@
+"""SFC device-placement rows (DESIGN.md §15).
+
+Row families under ``comm.placement/``:
+
+* ``hops/<torus>/<order>`` -- mean ring-neighbour physical ICI hops per
+  logical axis under each ``device_order`` embedding, on a production
+  pod (logical (32, 8) on the 16x16 torus) and on the 8-chip smoke
+  torus (logical (4, 2) on 2x4).  ``us_per_call`` is the cost of
+  computing the embedding + distance map (the placement path runs at
+  mesh-build time, so it must stay trivially cheap); the hop counts
+  live in ``derived`` and CI asserts the curve embeddings beat
+  row-major on the smoke torus.
+* ``link_bytes/<order>`` -- the modeled bytes-over-links of one train
+  step under each embedding: per-layer TP activation all-reduces over
+  the "model" axis plus the gradient all-reduce over the "data" axis
+  (the CommSpec term the tuner scores).  Same payloads across orders,
+  so the ratio isolates the placement -- CI asserts the SFC rows come
+  in under row-major on the smoke torus.
+* ``winner/<comm>`` -- the tuned energy-objective winner with and
+  without the comm term on a TP-sharded GEMM shape (fresh analytic
+  search, isolated cache): the row CI checks to prove the comm axis
+  actually changes adjudication.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.launch.mesh import link_distance
+from repro.tune import CommSpec, GemmSpec, TuneCache, resolve, \
+    ring_allreduce_link_bytes
+
+from .common import pick
+
+
+class _LogicalMesh:
+    """axis_names + shape mapping stand-in: the distance map is pure
+    math over the logical shape and torus, no devices needed."""
+
+    def __init__(self, data: int, model: int):
+        self.axis_names = ("data", "model")
+        self.shape = {"data": data, "model": model}
+
+
+def _hop_rows():
+    # production pod vs the CI smoke torus; logical axes chosen NOT to
+    # coincide with the torus dims -- the regime where a curve wins
+    (dsz, msz), torus = pick(((32, 8), (16, 16)), ((4, 2), (2, 4)))
+    mesh = _LogicalMesh(dsz, msz)
+    rows = []
+    for order in ("rowmajor", "hilbert", "morton"):
+        t0 = time.perf_counter()
+        ld = link_distance(mesh, device_order=order, torus=torus)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((
+            f"comm.placement/hops/{torus[0]}x{torus[1]}/{order}", us,
+            f"logical={dsz}x{msz};data_hops={ld['data']:.3f};"
+            f"model_hops={ld['model']:.3f};"
+            f"sum_hops={ld['data'] + ld['model']:.4f}"))
+    return rows
+
+
+def _link_byte_rows():
+    (dsz, msz), torus = pick(((32, 8), (16, 16)), ((4, 2), (2, 4)))
+    mesh = _LogicalMesh(dsz, msz)
+    b, d_model, n_layers = pick((32, 2048, 28), (8, 64, 2))
+    act_payload = b * d_model * 4.0            # per-layer TP all-reduce
+    grad_payload = n_layers * d_model * d_model * 4.0  # DP grad sync
+    rows = []
+    for order in ("rowmajor", "hilbert", "morton"):
+        t0 = time.perf_counter()
+        ld = link_distance(mesh, device_order=order, torus=torus)
+        link = (n_layers * ring_allreduce_link_bytes(
+                    act_payload, msz, max(ld["model"], 1.0))
+                + ring_allreduce_link_bytes(
+                    grad_payload, dsz, max(ld["data"], 1.0)))
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((
+            f"comm.placement/link_bytes/{order}", us,
+            f"tp={msz};dp={dsz};model_hops={ld['model']:.3f};"
+            f"data_hops={ld['data']:.3f};train_step_MB={link / 1e6:.4f}"))
+    return rows
+
+
+def _winner_rows(tmp_cache: str):
+    m, n, k = pick((512, 2048, 2048), (256, 512, 512))
+    cache = TuneCache(tmp_cache)
+    rows = []
+    for comm in (None, CommSpec(ways=8, hops=4.25)):
+        t0 = time.perf_counter()
+        r = resolve(GemmSpec(m, n, k, comm=comm), cache=cache,
+                    objective="energy", search=True, measure=False,
+                    refresh=True)
+        us = (time.perf_counter() - t0) * 1e6
+        tag = comm.tag() if comm else "none"
+        rows.append((
+            f"comm.placement/winner/{tag}", us,
+            f"schedule={r.config.schedule};f_scale={r.config.f_scale};"
+            f"blocks={r.config.bm}x{r.config.bn}x{r.config.bk};"
+            f"key={r.key}"))
+    return rows
+
+
+def run():
+    import tempfile
+
+    rows = _hop_rows()
+    rows += _link_byte_rows()
+    with tempfile.NamedTemporaryFile(suffix=".json") as f:
+        rows += _winner_rows(f.name)
+    return rows

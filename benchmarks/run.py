@@ -37,8 +37,11 @@ import time
 # byte parity, tune.drift.time_ratio median);
 # 8 adds the fault-tolerance rows (bench_fault_tolerance: guards-on vs
 # guards-off serve-step overhead, asserted < 3% in CI, plus recovery
-# latencies for snapshot capture/restore and the XLA kernel fallback)
-SCHEMA_VERSION = 8
+# latencies for snapshot capture/restore and the XLA kernel fallback);
+# 9 adds the placement rows (bench_comm_placement: per-device_order ring
+# hop counts + modeled bytes-over-links, asserted SFC < row-major on the
+# smoke torus in CI, and the energy winner with/without the comm term)
+SCHEMA_VERSION = 9
 
 MODULES = [
     "bench_exec_time",        # Table IV
@@ -59,6 +62,7 @@ MODULES = [
     "bench_obs_overhead",     # DESIGN.md §12: metrics/span layer overhead
     "bench_analysis_drift",   # DESIGN.md §13: static-vs-model drift rows
     "bench_fault_tolerance",  # DESIGN.md §14: guard overhead + recovery
+    "bench_comm_placement",   # DESIGN.md §15: SFC placement hop/link rows
 ]
 
 

@@ -33,7 +33,8 @@ from repro.tune.cost import TuneConfig, predict
 from .contracts import ContractReport
 
 __all__ = ["STATIC_DRIFT_TOL", "verify_order", "verify_schedule",
-           "stack_distance_traffic", "crosscheck_cost_model"]
+           "stack_distance_traffic", "crosscheck_cost_model",
+           "crosscheck_link_model"]
 
 # documented tolerance band for static-vs-model traffic: both sides are
 # exact replays of the same trace, so the band only absorbs float
@@ -188,4 +189,51 @@ def crosscheck_cost_model(
                 f"{rel:.1%} from the cost model's "
                 f"{est.traffic_bytes / 1e6:.3f} MB "
                 f"(tol {tol:.0%}) on {schedule} {mt}x{nt}x{kt}")
+    return rep
+
+
+def crosscheck_link_model(
+    payload_bytes: float,
+    ways: int,
+    *,
+    hops: float = 1.0,
+    tol: float = STATIC_DRIFT_TOL,
+) -> ContractReport:
+    """Static link-traffic drift check (DESIGN.md §15): an explicit
+    per-step ring simulation vs the closed form
+    :func:`repro.tune.cost.ring_allreduce_link_bytes`.
+
+    The simulation enumerates what a ring all-reduce actually sends:
+    ``ways - 1`` reduce-scatter steps then ``ways - 1`` all-gather
+    steps, each step every rank forwarding one ``payload / ways`` chunk
+    to its +1 neighbour over ``hops`` physical links -- summed chunk by
+    chunk, rank by rank, then divided by ``ways`` because the closed
+    form (like the roofline's ``t_ici``) is **per chip**: the ranks are
+    symmetric, every chip's links carry 1/ways of the total, and the
+    per-chip share is what bounds wall time.  The closed form collapses
+    that to ``2 (w-1)/w * payload * hops``; a deviation above ``tol``
+    means the formula and the collective it claims to model have
+    diverged (same static-drift discipline as
+    :func:`crosscheck_cost_model`)."""
+    from repro.tune.cost import ring_allreduce_link_bytes
+
+    chunk = payload_bytes / max(ways, 1)
+    total = 0.0
+    for _phase in ("reduce-scatter", "all-gather"):
+        for _step in range(max(ways - 1, 0)):
+            for _rank in range(ways):
+                total += chunk * hops  # one chunk over `hops` links
+    static = total / max(ways, 1)      # symmetric ranks: per-chip share
+    model = ring_allreduce_link_bytes(payload_bytes, ways, hops)
+    rel = abs(static - model) / max(model, 1.0) if ways > 1 else 0.0
+    rep = ContractReport(subject=f"link-drift ring w={ways} h={hops}")
+    rep.stats.update(model_bytes=float(model), static_bytes=float(static),
+                     rel_drift=float(rel), tol=tol, ways=int(ways),
+                     hops=float(hops))
+    if ways > 1 and rel > tol:
+        rep.add("link-drift",
+                f"simulated ring traffic {static / 1e6:.3f} MB deviates "
+                f"{rel:.1%} from ring_allreduce_link_bytes "
+                f"{model / 1e6:.3f} MB (tol {tol:.0%}) at "
+                f"ways={ways} hops={hops}")
     return rep

@@ -136,27 +136,65 @@ def decode_seq_axes(cfg: ArchConfig, mesh: Mesh, global_batch: int) -> tuple:
 
 
 def paged_decode_state_specs(cfg: ArchConfig, mesh: Mesh) -> dict:
-    """Paged KV state (DESIGN.md §10): the physical page pool and block
-    tables are replicated for now -- the Morton (layer, page) interleave
-    deliberately scatters one layer's rows across the pool, so a
-    page-dim shard would turn every layer gather into a cross-shard
-    exchange.  Sharding the pool along kv-heads (the one dim every
-    gather keeps dense) is the follow-up recorded in ROADMAP.md."""
-    return {"k_pages": P(), "v_pages": P(), "page_perm": P(),
+    """Paged KV state (DESIGN.md §10, §15): the pool is sharded along
+    **kv-heads** over "model" when divisible.
+
+    The row (page) dim must stay unsharded -- the Morton (layer, page)
+    interleave deliberately scatters one layer's rows across the pool,
+    so a page-dim shard would turn every layer gather into a
+    cross-shard exchange.  The kv-head dim is the one dim every
+    block-table gather keeps dense: each shard holds
+    ``n_kv_heads / model`` full head-slices of every page, its gathers
+    stay local, and the query heads are sharded over the same axis by
+    the attention context -- so the paged kernel's scalar-prefetch /
+    block-table discipline is preserved per shard with zero collective
+    traffic inside the attention core.  Block tables and the page
+    permutation are control metadata read by every shard: replicated.
+
+    When kv-heads do not divide the model axis the pool falls back to
+    replicated (never a silent wrong-axis shard), counted as
+    ``distributed.paged_kv_replicated`` so dashboards can see the
+    memory-scaling escape hatch being taken."""
+    m = mesh.shape["model"]
+    if m > 1 and cfg.n_kv_heads and cfg.n_kv_heads % m == 0:
+        kv = P(None, None, "model", None)
+    else:
+        if m > 1:
+            from repro.obs.metrics import default_registry
+            default_registry().counter(
+                "distributed.paged_kv_replicated").inc()
+        kv = P()
+    return {"k_pages": kv, "v_pages": kv, "page_perm": P(),
             "block_tables": P()}
 
 
 def decode_state_specs(cfg: ArchConfig, mesh: Mesh, global_batch: int,
                        cache_len: int) -> dict:
     """KV caches: batch over dp, **sequence over SP axes** (sp_attention);
-    SSM states: batch over dp, heads over model when divisible."""
+    SSM states: batch over dp, heads over model when divisible.
+
+    A ``cache_len`` the full SP axis product does not divide steps down
+    to "model"-only SP -- but only if "model" itself divides; otherwise
+    the cache replicates.  (The old fallback assumed "model" always
+    divides and handed jax an invalid spec for e.g. cache_len=96 on an
+    8-way model axis, which GSPMD turns into silent uneven padding or a
+    hard error depending on version.)  Replicated fallbacks are counted
+    as ``distributed.seq_shard_fallback_replicated``."""
     dp = _dp_if_divisible(dp_axes(mesh), global_batch, mesh)
     m = mesh.shape["model"]
     seq = decode_seq_axes(cfg, mesh, global_batch)
     seq_sz = 1
     for a in seq:
         seq_sz *= mesh.shape[a]
-    sspec = seq if cache_len % seq_sz == 0 else ("model",)
+    if cache_len % seq_sz == 0:
+        sspec = seq
+    elif cache_len % m == 0:
+        sspec = ("model",)
+    else:
+        from repro.obs.metrics import default_registry
+        default_registry().counter(
+            "distributed.seq_shard_fallback_replicated").inc()
+        sspec = (None,)
     sspec = sspec if len(sspec) > 1 else sspec[0]
     s: dict = {}
     if cfg.has_attention:

@@ -51,6 +51,16 @@ def sp_decode_attention(q, k_cache, v_cache, kv_pos, k_new, v_new,
     k_new/v_new: (B, 1, Hkv, dh); slot/pos: scalars.
     Returns (out (B,1,H,dh), k', v', kv_pos').
 
+    **Batch-sharding contract**: ``dp_axes`` is honoured only when the
+    dp axis product divides B; otherwise the shard_map runs with batch
+    replicated -- every device computes the full batch and the caller's
+    batch sharding constraint (not this function) decides the final
+    layout.  The drop is not silent: it increments the
+    ``distributed.dp_dropped`` counter, because a production mesh whose
+    batch stopped dividing (e.g. a degraded spec with a ragged batch)
+    quietly loses its data-parallel speedup here and that must show up
+    in a metrics snapshot, not in a profiler three layers down.
+
     The shard_map is FULLY manual over dp+seq axes (partial-manual with
     auto batch axes trips an XLA SPMD partitioner CHECK at 16-way meshes).
     """
@@ -59,6 +69,9 @@ def sp_decode_attention(q, k_cache, v_cache, kv_pos, k_new, v_new,
     dsz = 1
     for a in dp_axes:
         dsz *= mesh.shape[a]
+    if dp_axes and dsz > 1 and b % dsz != 0:
+        from repro.obs.metrics import default_registry
+        default_registry().counter("distributed.dp_dropped").inc()
     dp_axes = tuple(dp_axes) if (dsz and b % max(dsz, 1) == 0 and dsz > 1) \
         else ()
 

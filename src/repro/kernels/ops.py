@@ -67,12 +67,16 @@ def _pad_last(x, mult: int):
 
 def _resolve_auto(m: int, n: int, k: int, dtype, batched: bool = False,
                   objective: str = "time", has_bias: bool = False,
-                  activation: str = "none", has_residual: bool = False):
+                  activation: str = "none", has_residual: bool = False,
+                  comm=None):
     """Map schedule="auto" to a concrete (schedule, blocks, prefetch, g).
 
     The epilogue shape (bias / activation / residual presence) keys the
     tuner: a fused epilogue removes whole HBM passes from the traffic
-    model, which moves the block-size optimum (DESIGN.md §9).
+    model, which moves the block-size optimum (DESIGN.md §9).  ``comm``
+    (a :class:`repro.tune.CommSpec` or None) adds the mesh's collective
+    term to the scoring and keys the winner under the mesh keyspace
+    (DESIGN.md §15).
 
     The winner's DVFS dimension (``TuneConfig.f_scale``) is stripped
     here: it parameterises the tuner's scoring and the launch layer's
@@ -87,7 +91,7 @@ def _resolve_auto(m: int, n: int, k: int, dtype, batched: bool = False,
                       residual=has_residual)
     cfg = resolve_config(int(m), int(n), int(k), jnp.dtype(dtype).name,
                          batched=batched, objective=objective,
-                         epilogue=None if ep.is_noop else ep)
+                         epilogue=None if ep.is_noop else ep, comm=comm)
     return cfg.schedule, cfg.bm, cfg.bn, cfg.bk, cfg.use_prefetch, cfg.g
 
 
@@ -152,6 +156,7 @@ def sfc_matmul(
     force_pallas: bool = False,
     g: int = 0,
     objective: str = "time",
+    comm=None,
     bias=None,
     activation: str = "none",
     residual=None,
@@ -180,7 +185,8 @@ def sfc_matmul(
         schedule, bm, bn, bk, use_prefetch, g = _resolve_auto(
             a.shape[0], b.shape[1], a.shape[1], a.dtype,
             objective=objective, has_bias=bias is not None,
-            activation=activation, has_residual=residual is not None)
+            activation=activation, has_residual=residual is not None,
+            comm=comm)
     return _sfc_matmul(
         a, b, schedule=schedule, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
         use_prefetch=use_prefetch, interpret=interpret,
@@ -268,6 +274,7 @@ def sfc_matmul_batched(
     via_vmap: bool = False,
     g: int = 0,
     objective: str = "time",
+    comm=None,
     bias=None,
     activation: str = "none",
     residual=None,
@@ -294,7 +301,8 @@ def sfc_matmul_batched(
         schedule, bm, bn, bk, use_prefetch, g = _resolve_auto(
             a.shape[-2], b.shape[-1], a.shape[-1], a.dtype, batched=True,
             objective=objective, has_bias=bias is not None,
-            activation=activation, has_residual=residual is not None)
+            activation=activation, has_residual=residual is not None,
+            comm=comm)
     return _sfc_matmul_batched(
         a, b, schedule=schedule, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
         use_prefetch=use_prefetch, interpret=interpret,

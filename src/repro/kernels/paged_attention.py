@@ -16,6 +16,15 @@ Accumulation is the standard online softmax over page blocks, carried in
 f32 VMEM scratch and flushed once at the last page -- the decode-attention
 analogue of the SFC GEMM's last-k flush.
 
+The kernel reads every shape it tiles by -- query heads, kv-heads, head
+dim -- from its *local* operands, never from a model config, so a
+kv-head-sharded pool (``repro.distributed.sharding
+.paged_decode_state_specs``, DESIGN.md §15) needs no kernel changes:
+each shard launches over its own ``n_kv_heads / model`` head slice with
+the full block table (replicated control metadata), and the
+scalar-prefetch pipeline above runs per shard exactly as it does on one
+chip.
+
 ``paged_decode_attention`` is the dispatching entry point: the Pallas
 kernel on TPU (or under ``interpret=True``), otherwise the pure-XLA
 gather fallback :func:`repro.kernels.ref.paged_decode_attention_ref`,

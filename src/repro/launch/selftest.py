@@ -188,6 +188,93 @@ def check_train_cli_with_failure():
     print("OK train_cli_with_failure")
 
 
+def check_paged_sharded_matches_replicated(arch="qwen3_1_7b"):
+    """kv-head-sharded paged pool == replicated pool == single device
+    (DESIGN.md §15): identical logits under a ragged slot-isolated
+    prefill + lockstep greedy decode, with the pool sharding pinned via
+    jit in/out shardings so GSPMD cannot quietly replicate it back.
+
+    ``REPRO_PARITY_SPEC`` (JSON: {"prompts": [[...], ...], "steps": N})
+    overrides the deterministic schedule -- the hook the hypothesis
+    harness in tests/test_paged_kv.py uses to replay drawn schedules
+    through the sharded path."""
+    import json
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed import sharding as shd
+    from repro.distributed.ctx import mesh_context
+    from repro.serve.paged_kv import init_paged_serving
+    from repro.serve.state import DecodeState, KVLayout
+
+    spec_env = os.environ.get("REPRO_PARITY_SPEC")
+    spec = json.loads(spec_env) if spec_env else {
+        "prompts": [[5, 6, 7, 8, 9], [3, 4, 5], [7], [2, 3, 4, 5]],
+        "steps": 3}
+    prompts, steps = spec["prompts"], int(spec["steps"])
+    b = len(prompts)
+
+    # hilbert placement: the parity claim must hold under the curve
+    # embedding production would use, not just the identity one
+    mesh = make_smoke_mesh((2, 2, 2), device_order="hilbert")
+    cfg = dataclasses.replace(get_smoke_config(arch), remat=False)
+    m = mesh.shape["model"]
+    assert cfg.n_kv_heads % m == 0, (cfg.n_kv_heads, m)
+    sspec = shd.paged_decode_state_specs(cfg, mesh)
+    assert sspec["k_pages"] == P(None, None, "model", None), sspec
+
+    params = init_model(cfg, jax.random.PRNGKey(0))
+
+    def step(p, s, toks, pos, mask):
+        with mesh_context(mesh):
+            return decode_step(p, cfg, s, toks, pos, row_mask=mask)
+
+    p_shd = shd.to_shardings(shd.param_specs(cfg), mesh)
+    s_shd = shd.to_shardings(DecodeState(sspec, KVLayout.PAGED), mesh)
+    rep = NamedSharding(mesh, P())
+    fn = jax.jit(step,
+                 in_shardings=(p_shd, s_shd, rep, rep, rep),
+                 out_shardings=(rep, s_shd))
+    local = jax.jit(lambda p, s, t, pos, mk:
+                    decode_step(p, cfg, s, t, pos, row_mask=mk))
+
+    alloc, state_l = init_paged_serving(cfg, b, 32, page_size=4)
+    params_d = jax.device_put(params, p_shd)
+    state_d = jax.device_put(
+        init_paged_serving(cfg, b, 32, page_size=4)[1], s_shd)
+
+    def both(toks, pos, mask):
+        nonlocal state_d, state_l
+        state_d["block_tables"] = jnp.asarray(alloc.block_table)
+        state_l["block_tables"] = jnp.asarray(alloc.block_table)
+        ld, state_d = fn(params_d, state_d, toks,
+                         jnp.asarray(pos, jnp.int32), mask)
+        ll, state_l = local(params, state_l, toks,
+                            jnp.asarray(pos, jnp.int32), mask)
+        np.testing.assert_allclose(np.asarray(ld), np.asarray(ll),
+                                   rtol=3e-3, atol=3e-3)
+        return ll
+
+    for s, pr in enumerate(prompts):      # ragged slot-isolated prefill
+        mask = np.zeros(b, bool)
+        mask[s] = True
+        for i, tok in enumerate(pr):
+            alloc.ensure(s, i)
+            toks = np.zeros((b, 1), np.int32)
+            toks[s, 0] = tok
+            both(jnp.asarray(toks), i, jnp.asarray(mask))
+    pos = max(len(p) for p in prompts)
+    toks = np.asarray([[p[-1]] for p in prompts], np.int32)
+    mask = np.ones(b, bool)
+    for _ in range(steps):                # lockstep greedy decode
+        for s in range(b):
+            alloc.ensure(s, pos)
+        ll = both(jnp.asarray(toks), pos, jnp.asarray(mask))
+        toks = np.argmax(np.asarray(ll)[:, 0], -1).astype(np.int32)[:, None]
+        pos += 1
+    print(f"OK paged_sharded_matches_replicated {arch} b={b} steps={steps}")
+
+
 def main():
     checks = {k[len("check_"):]: v for k, v in globals().items()
               if k.startswith("check_")}

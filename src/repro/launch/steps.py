@@ -44,26 +44,60 @@ def _split_microbatches(batch, n):
         lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
 
 
-def _engine_for(engine: DotEngine | None,
-                objective: str | None) -> DotEngine:
-    """Resolve the step's GEMM engine from (engine, objective).
+def _comm_for(mesh):
+    """The :class:`repro.tune.CommSpec` of the TP all-reduce this mesh
+    implies, or None off-mesh / when the model axis is trivial.
+
+    Every row-parallel GEMM output in the sharded forward pass feeds a
+    ring all-reduce over ``"model"``; its ring size and the mean
+    physical hop count of the mesh's curve embedding
+    (:func:`repro.launch.mesh.link_distance`, DESIGN.md §15) are what
+    the tuner's bytes-over-links term scores.  Meshes whose in-pod chip
+    count has no power-of-two torus model fall back to hops=1.0 (the
+    adjacent-neighbour floor) rather than failing the build.
+    """
+    if mesh is None:
+        return None
+    ways = int(dict(mesh.shape).get("model", 1))
+    if ways < 2:
+        return None
+    from repro.tune import CommSpec
+
+    from .mesh import link_distance
+    try:
+        hops = link_distance(mesh).get("model", 1.0)
+    except ValueError:
+        hops = 1.0
+    return CommSpec(ways=ways, hops=max(hops, 1.0), axis="model")
+
+
+def _engine_for(engine: DotEngine | None, objective: str | None,
+                comm=None) -> DotEngine:
+    """Resolve the step's GEMM engine from (engine, objective, comm).
 
     No objective: the explicit engine, or the XLA default -- the
     historical behaviour.  An objective with no engine builds the
     tuner-routed engine under that metric; an objective alongside an
     explicit engine re-stamps the engine's adjudication metric (the
-    engine is frozen, so this is a copy, never a mutation).
+    engine is frozen, so this is a copy, never a mutation).  ``comm``
+    (from :func:`_comm_for`) is stamped onto tuner-routed engines only:
+    explicit schedules ignore it, and leaving it off keeps their cache
+    keys untouched.
     """
     if objective is None:
-        return engine or DotEngine()
-    from repro.tune.objective import OBJECTIVES
-    if objective not in OBJECTIVES:
-        raise ValueError(
-            f"unknown objective {objective!r}; choose from {OBJECTIVES}")
-    if engine is None:
-        return DotEngine(schedule="auto", objective=objective)
-    if engine.objective != objective:
-        return dataclasses.replace(engine, objective=objective)
+        engine = engine or DotEngine()
+    else:
+        from repro.tune.objective import OBJECTIVES
+        if objective not in OBJECTIVES:
+            raise ValueError(
+                f"unknown objective {objective!r}; choose from {OBJECTIVES}")
+        if engine is None:
+            engine = DotEngine(schedule="auto", objective=objective)
+        elif engine.objective != objective:
+            engine = dataclasses.replace(engine, objective=objective)
+    if comm is not None and engine.schedule == "auto" \
+            and engine.comm != comm:
+        engine = dataclasses.replace(engine, comm=comm)
     return engine
 
 
@@ -72,7 +106,7 @@ def make_train_step(cfg, mesh, opt_cfg: AdamWConfig, *, grad_accum: int = 1,
                     pod_compress: bool = False,
                     objective: str | None = None):
     """The pure step function (trace-time mesh context included)."""
-    engine = _engine_for(engine, objective)
+    engine = _engine_for(engine, objective, _comm_for(mesh))
 
     def grads_of(params, batch):
         def loss_wrap(p):
@@ -194,6 +228,8 @@ def _build_train_step(cfg, mesh, shape_name, *, opt_cfg, grad_accum,
                       pod_compress, engine, objective):
     opt_cfg = opt_cfg or AdamWConfig()
     spec = SHAPES[shape_name]
+    _publish_link_gauges(cfg, mesh, spec.global_batch * spec.seq_len,
+                         "train")
     step = make_train_step(cfg, mesh, opt_cfg, grad_accum=grad_accum,
                            pod_compress=pod_compress, engine=engine,
                            objective=objective)
@@ -239,7 +275,7 @@ def build_prefill_step(cfg, mesh, shape_name: str, *,
 
 
 def _build_prefill_step(cfg, mesh, shape_name, *, engine, objective):
-    engine = _engine_for(engine, objective)
+    engine = _engine_for(engine, objective, _comm_for(mesh))
     spec = SHAPES[shape_name]
     icfg = dataclasses.replace(cfg, remat=False)  # no grads -> no remat
 
@@ -268,7 +304,7 @@ def _build_prefill_step(cfg, mesh, shape_name, *, engine, objective):
 # ----------------------------------------------------------------- serve ---
 def make_serve_step(cfg, mesh, seq_axes, engine: DotEngine | None = None,
                     objective: str | None = None):
-    engine = _engine_for(engine, objective)
+    engine = _engine_for(engine, objective, _comm_for(mesh))
 
     def step(params, state, tokens, pos):
         with mesh_context(mesh, seq_axes=seq_axes):
@@ -310,11 +346,31 @@ def build_serve_step(cfg, mesh, shape_name: str, *,
             page_size=page_size)
 
 
+def _publish_link_gauges(cfg, mesh, b: int, kind: str) -> None:
+    """Placement telemetry (DESIGN.md §12, §15): the mesh's mean
+    model-axis hop count and the modeled bytes-over-links of one step's
+    TP all-reduces (one (b, d_model) f32 ring all-reduce per layer) --
+    the same term the tuner's CommSpec scores, surfaced as gauges so a
+    metrics snapshot shows what the current placement costs."""
+    comm = _comm_for(mesh)
+    if comm is None:
+        return
+    from repro.obs.metrics import default_registry
+    from repro.tune import ring_allreduce_link_bytes
+    reg = default_registry()
+    reg.gauge("distributed.link_hops.model").set(comm.hops)
+    per_layer = ring_allreduce_link_bytes(
+        b * cfg.d_model * 4.0, comm.ways, comm.hops)
+    reg.gauge(f"distributed.link_bytes.{kind}_step").set(
+        cfg.n_layers * per_layer)
+
+
 def _build_serve_step(cfg, mesh, shape_name, *, engine, cache_len,
                       objective, layout, paged, page_size):
     layout = resolve_layout(layout, paged)
     spec = SHAPES[shape_name]
     b = spec.global_batch
+    _publish_link_gauges(cfg, mesh, b, "decode")
     cache_len = cache_len or (
         min(spec.seq_len, cfg.swa_window)
         if cfg.swa_window is not None else spec.seq_len)

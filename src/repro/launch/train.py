@@ -47,6 +47,11 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--mesh", default=None,
                     help="e.g. '2,2,2' to build a (pod,data,model) mesh")
+    ap.add_argument("--device-order", default="rowmajor",
+                    help="embed the logical mesh on the physical torus "
+                         "along this curve (rowmajor|hilbert|morton); "
+                         "ring collectives then step between physically "
+                         "nearby chips (DESIGN.md §15)")
     ap.add_argument("--pod-compress", action="store_true")
     ap.add_argument("--inject-failure-at", type=int, default=None)
     ap.add_argument("--log-every", type=int, default=10)
@@ -87,9 +92,17 @@ def main(argv=None):
 
     mesh = None
     if args.mesh:
+        from repro.launch.mesh import link_distance, make_smoke_mesh
         dims = tuple(int(x) for x in args.mesh.split(","))
         names = ("pod", "data", "model")[-len(dims):]
-        mesh = jax.make_mesh(dims, names)
+        # same validated placement path as production: unknown orders
+        # raise here instead of silently training on a row-major mesh
+        mesh = make_smoke_mesh(dims, names, device_order=args.device_order)
+        if args.device_order != "rowmajor":
+            hops = link_distance(mesh)
+            print("[train] device_order=%s ring-neighbour hops %s" % (
+                args.device_order,
+                " ".join(f"{a}={h:.2f}" for a, h in hops.items())))
 
     opt_cfg = AdamWConfig(peak_lr=args.lr, warmup=min(10, args.steps // 5),
                           total_steps=args.steps)

@@ -40,12 +40,21 @@ class DotEngine:
     launch-layer telemetry reads it back via
     ``repro.tune.resolved_f_scale`` so J accounting runs at the
     frequency the objective selected.
+
+    comm: the :class:`repro.tune.CommSpec` of the collective each GEMM's
+    output feeds on a sharded mesh (DESIGN.md §15) -- the TP all-reduce
+    ring size and the mean physical hop count of the mesh's curve
+    embedding (:func:`repro.launch.mesh.link_distance`).  Only consulted
+    under schedule="auto": winners are then scored with the hop-weighted
+    bytes-over-links term and cached under the mesh keyspace.  None
+    (default) keeps every single-chip cache key byte-identical.
     """
     schedule: str = "xla"
     block: tuple = (128, 128, 128)
     use_prefetch: bool = True
     interpret: bool = False
     objective: str = "time"
+    comm: Any = None  # repro.tune.CommSpec | None (hashable, frozen)
 
     def dot(self, x, w, *, bias=None, activation: str = "none",
             residual=None, out_dtype=None):
@@ -80,7 +89,7 @@ class DotEngine:
         out = sfc_matmul(
             x2, w, schedule=self.schedule, bm=bm, bn=bn, bk=bk,
             use_prefetch=self.use_prefetch, interpret=self.interpret,
-            objective=self.objective, out_dtype=out_dtype,
+            objective=self.objective, comm=self.comm, out_dtype=out_dtype,
             bias=bias, activation=activation, residual=res2,
         )
         return out.reshape(*lead, w.shape[-1])
@@ -106,7 +115,7 @@ class DotEngine:
         return sfc_matmul_batched(
             x, w, schedule=self.schedule, bm=bm, bn=bn, bk=bk,
             use_prefetch=self.use_prefetch, interpret=self.interpret,
-            objective=self.objective, out_dtype=out_dtype,
+            objective=self.objective, comm=self.comm, out_dtype=out_dtype,
             bias=bias, activation=activation, residual=residual,
         )
 

@@ -548,6 +548,13 @@ def init_paged_decode_state(cfg, slots: int, *, page_size: int = 8,
     all -1; the serve loop mirrors its host allocator into it.  The
     allocator and this state must agree on ``num_pages`` and the table
     width -- build both through :func:`init_paged_serving`.
+
+    On a mesh the pool shards along the kv-head dim (axis 2) over
+    "model" when divisible -- ``repro.distributed.sharding
+    .paged_decode_state_specs`` (DESIGN.md §15).  The row dim must stay
+    unsharded: the Morton interleave scatters a layer's rows across the
+    pool on purpose, and the head dim is the one dim every block-table
+    gather keeps dense, so head-sharding costs zero cross-shard traffic.
     """
     import jax.numpy as jnp
 

@@ -21,6 +21,7 @@ from .autotune import (  # noqa: F401
 from .cache import TuneCache, cache_key, default_cache_path, shape_bucket  # noqa: F401
 from .cost import (  # noqa: F401
     AttnSpec,
+    CommSpec,
     CostEstimate,
     EpilogueSpec,
     TuneConfig,
@@ -30,6 +31,7 @@ from .cost import (  # noqa: F401
     epilogue_flops,
     predict,
     predict_attn,
+    ring_allreduce_link_bytes,
     vmem_block_capacity,
     with_f_scale,
 )

@@ -32,8 +32,8 @@ from repro.core.energy import F_SCALE_MAX, TPU_V5E, clamp_f_scale
 from repro.obs.metrics import default_registry
 
 from .cache import TuneCache, cache_key, default_cache_path
-from .cost import AttnSpec, CostEstimate, EpilogueSpec, TuneConfig, \
-    predict, predict_attn, with_f_scale
+from .cost import AttnSpec, CommSpec, CostEstimate, EpilogueSpec, \
+    TuneConfig, predict, predict_attn, with_f_scale
 from .objective import OBJECTIVES, objective_value
 
 __all__ = ["TuneResult", "candidate_configs", "autotune", "resolve_config",
@@ -261,6 +261,7 @@ def autotune(
     objective: str = "time",
     f_scales: tuple[float, ...] | None = None,
     epilogue: EpilogueSpec | None = None,
+    comm: CommSpec | None = None,
 ) -> TuneResult:
     """Pick the best GEMM config for (M, N, K, dtype) on ``backend``.
 
@@ -287,6 +288,12 @@ def autotune(
     timing: ``objective="time"`` adjudicates on the raw measurement,
     while energy/EDP scoring scales the nominal measurement by the
     model's own DVFS slowdown ratio for the static term.
+
+    ``comm`` is the collective the caller's mesh implies (DESIGN.md
+    §15): candidates are scored with the hop-weighted bytes-over-links
+    term (:func:`repro.tune.cost.predict` with ``comm=``) and the winner
+    is cached under the mesh keyspace (``.../comm=tp8-h2.50``), so
+    single-chip winners never leak onto a mesh and vice versa.
     """
     import jax
 
@@ -302,7 +309,8 @@ def autotune(
         epilogue = None
     key = cache_key(m, n, k, dtype_name, backend, batched=batched,
                     objective=objective,
-                    epilogue=epilogue.tag() if epilogue else None)
+                    epilogue=epilogue.tag() if epilogue else None,
+                    comm=comm.tag() if comm else None)
 
     if not refresh:
         hit = cache.get(key)
@@ -337,7 +345,8 @@ def autotune(
         kc = c.kernel_config()
         if kc not in base:
             base[kc] = predict(kc, m, n, k, dtype_bytes, hw=hw,
-                               capacity=capacity, epilogue=epilogue)
+                               capacity=capacity, epilogue=epilogue,
+                               comm=comm)
     fs = f_scale_candidates(hw) if f_scales is None else tuple(
         clamp_f_scale(hw, f) for f in f_scales)
     ests = []
@@ -391,6 +400,11 @@ def autotune(
             else:
                 b = base[kc]
                 t = t_nom * (e.time / b.time)
+            # the wall clock times the local kernel only -- the
+            # collective is not in the measured region -- so the
+            # modeled link time floors the measurement (same overlap
+            # assumption as the analytic roofline)
+            t = max(t, e.t_ici)
             score = objective_value(e, objective, hw=hw, wall_time=t)
             if best_score is None or score < best_score:
                 best, best_score = e.config, score
@@ -409,6 +423,7 @@ def autotune(
         "backend": backend,
         "objective": objective,
         "epilogue": epilogue.tag() if epilogue else "none",
+        "comm": comm.tag() if comm else "none",
         "measured": measured,
         "predicted_time": chosen_est.time if chosen_est else None,
         "predicted_score": (objective_value(chosen_est, objective, hw=hw)
@@ -507,6 +522,7 @@ def resolve_config(
     batched: bool = False,
     objective: str = "time",
     epilogue: EpilogueSpec | None = None,
+    comm: CommSpec | None = None,
 ) -> TuneConfig:
     """Hot-path ``schedule="auto"`` resolution: cached winner or a fresh
     (analytic + measured-on-TPU) search.  Memoised in-process, so after
@@ -514,9 +530,11 @@ def resolve_config(
     trace time (shapes are static).  ``batched`` keys the 3-D-grid
     kernel's winners separately from the 2-D kernel's (different block
     specs, different optimum); ``objective`` selects the adjudication
-    metric and ``epilogue`` the fused bias/activation/residual shape --
-    both key the memo and the on-disk cache, so time-tuned or bare-GEMM
-    winners never leak into an energy/EDP or fused-epilogue policy."""
+    metric, ``epilogue`` the fused bias/activation/residual shape and
+    ``comm`` the mesh's collective term (DESIGN.md §15) -- all three key
+    the memo and the on-disk cache, so time-tuned, bare-GEMM or
+    single-chip winners never leak into an energy/EDP, fused-epilogue
+    or multi-chip policy."""
     import jax
 
     dtype_name = _dtype_name(dtype)
@@ -526,12 +544,13 @@ def resolve_config(
     path = cache.path if cache is not None else default_cache_path()
     bucket = cache_key(m, n, k, dtype_name, bk_, batched=batched,
                        objective=objective,
-                       epilogue=epilogue.tag() if epilogue else None)
+                       epilogue=epilogue.tag() if epilogue else None,
+                       comm=comm.tag() if comm else None)
     cfg = _memoised_resolve(
         path, bucket,
         lambda: autotune(m, n, k, dtype, backend=backend, cache=cache,
                          batched=batched, objective=objective,
-                         epilogue=epilogue).config)
+                         epilogue=epilogue, comm=comm).config)
     # per-call: validity depends on the exact shape, not the bucket
     return _validate_for_shape(cfg, m, n, k, _dtype_bytes(dtype))
 
@@ -547,6 +566,7 @@ def resolved_f_scale(
     batched: bool = False,
     objective: str = "time",
     epilogue: EpilogueSpec | None = None,
+    comm: CommSpec | None = None,
 ) -> float:
     """The DVFS operating point of the tuned winner for this shape.
 
@@ -558,16 +578,17 @@ def resolved_f_scale(
     """
     return resolve_config(m, n, k, dtype, backend=backend, cache=cache,
                           batched=batched, objective=objective,
-                          epilogue=epilogue).f_scale
+                          epilogue=epilogue, comm=comm).f_scale
 
 
 # ------------------------------------------------------ decode attention ---
 def _attn_key(slots: int, cache_len: int, n_kv_heads: int, d_head: int,
               dtype_name: str, backend: str, attn: AttnSpec,
-              objective: str) -> str:
+              objective: str, comm: CommSpec | None = None) -> str:
     # attention "shape" for bucketing: (slots, kv width, cache_len)
     return cache_key(slots, n_kv_heads * d_head, cache_len, dtype_name,
-                     backend, objective=objective, attn=attn.tag())
+                     backend, objective=objective, attn=attn.tag(),
+                     comm=comm.tag() if comm else None)
 
 
 def autotune_attn(
@@ -586,6 +607,7 @@ def autotune_attn(
     objective: str = "time",
     f_scales: tuple[float, ...] | None = None,
     lengths=None,
+    comm: CommSpec | None = None,
 ) -> TuneResult:
     """Tune the decode-attention step under its own cache keyspace
     (``.../attn=paged-p8`` / ``.../attn=contig``, DESIGN.md §10).
@@ -610,7 +632,7 @@ def autotune_attn(
     if cache is None:
         cache = TuneCache()
     key = _attn_key(slots, cache_len, n_kv_heads, d_head, dtype_name,
-                    backend, attn, objective)
+                    backend, attn, objective, comm)
     if not refresh:
         hit = cache.get(key)
         if hit is not None:
@@ -623,7 +645,7 @@ def autotune_attn(
                          attn, slots=slots, cache_len=cache_len,
                          n_heads=n_heads, n_kv_heads=n_kv_heads,
                          d_head=d_head, lengths=lengths,
-                         dtype_bytes=dtype_bytes, hw=hw)
+                         dtype_bytes=dtype_bytes, hw=hw, comm=comm)
             for f in dict.fromkeys(fs)]
     ests.sort(key=lambda e: (objective_value(e, objective, hw=hw),
                              -e.config.f_scale))
@@ -635,6 +657,7 @@ def autotune_attn(
         "backend": backend,
         "objective": objective,
         "attn": attn.tag(),
+        "comm": comm.tag() if comm else "none",
         "predicted_time": chosen.time,
         "predicted_bytes": chosen.traffic_bytes,
         "predicted_score": objective_value(chosen, objective, hw=hw),
@@ -655,23 +678,26 @@ def resolve_attn_config(
     backend: str | None = None,
     cache: TuneCache | None = None,
     objective: str = "time",
+    comm: CommSpec | None = None,
 ) -> TuneConfig:
     """Hot-path resolution of the decode-attention winner: the memoised
     twin of :func:`resolve_config` over the ``attn=`` keyspace (same
-    :func:`_memoised_resolve` mtime discipline)."""
+    :func:`_memoised_resolve` mtime discipline).  ``comm`` keys the mesh
+    keyspace exactly as in :func:`resolve_config`."""
     import jax
 
     dtype_name = _dtype_name(dtype)
     bk_ = backend or jax.default_backend()
     path = cache.path if cache is not None else default_cache_path()
     bucket = _attn_key(slots, cache_len, n_kv_heads, d_head, dtype_name,
-                       bk_, attn, objective)
+                       bk_, attn, objective, comm)
     return _memoised_resolve(
         path, bucket,
         lambda: autotune_attn(slots, cache_len, n_heads=n_heads,
                               n_kv_heads=n_kv_heads, d_head=d_head,
                               dtype=dtype, attn=attn, backend=backend,
-                              cache=cache, objective=objective).config)
+                              cache=cache, objective=objective,
+                              comm=comm).config)
 
 
 def resolved_attn_f_scale(
@@ -686,6 +712,7 @@ def resolved_attn_f_scale(
     backend: str | None = None,
     cache: TuneCache | None = None,
     objective: str = "time",
+    comm: CommSpec | None = None,
 ) -> float:
     """The DVFS operating point the attention phase tuned to -- stamped
     into serve/train telemetry next to the projection GEMM's own
@@ -693,7 +720,7 @@ def resolved_attn_f_scale(
     return resolve_attn_config(
         slots, cache_len, n_heads=n_heads, n_kv_heads=n_kv_heads,
         d_head=d_head, dtype=dtype, attn=attn, backend=backend,
-        cache=cache, objective=objective).f_scale
+        cache=cache, objective=objective, comm=comm).f_scale
 
 
 # ------------------------------------------------------ unified resolve ----
@@ -703,7 +730,8 @@ class GemmSpec:
     took as six positional/keyword arguments, packaged so call sites
     build the spec once and hand it around (launch layer, benchmarks).
     ``epilogue`` is the fused bias/activation/residual the caller will
-    attach (DESIGN.md §9)."""
+    attach (DESIGN.md §9); ``comm`` is the mesh's collective term
+    (DESIGN.md §15)."""
 
     m: int
     n: int
@@ -711,6 +739,7 @@ class GemmSpec:
     dtype: str = "float32"
     batched: bool = False
     epilogue: EpilogueSpec | None = None
+    comm: CommSpec | None = None
 
 
 @dataclass(frozen=True)
@@ -726,6 +755,7 @@ class DecodeAttnSpec:
     d_head: int
     dtype: str = "float32"
     attn: AttnSpec = AttnSpec()
+    comm: CommSpec | None = None
 
 
 def resolve(
@@ -758,14 +788,15 @@ def resolve(
             return autotune(spec.m, spec.n, spec.k, spec.dtype,
                             backend=backend, cache=cache,
                             batched=spec.batched, objective=objective,
-                            epilogue=spec.epilogue, **search_kw)
+                            epilogue=spec.epilogue, comm=spec.comm,
+                            **search_kw)
         if search_kw:
             raise TypeError(
                 f"search options {sorted(search_kw)} need search=True")
         return resolve_config(spec.m, spec.n, spec.k, spec.dtype,
                               backend=backend, cache=cache,
                               batched=spec.batched, objective=objective,
-                              epilogue=spec.epilogue)
+                              epilogue=spec.epilogue, comm=spec.comm)
     if isinstance(spec, DecodeAttnSpec):
         if search:
             return autotune_attn(spec.slots, spec.cache_len,
@@ -774,7 +805,7 @@ def resolve(
                                  d_head=spec.d_head, dtype=spec.dtype,
                                  attn=spec.attn, backend=backend,
                                  cache=cache, objective=objective,
-                                 **search_kw)
+                                 comm=spec.comm, **search_kw)
         if search_kw:
             raise TypeError(
                 f"search options {sorted(search_kw)} need search=True")
@@ -783,7 +814,8 @@ def resolve(
                                    n_kv_heads=spec.n_kv_heads,
                                    d_head=spec.d_head, dtype=spec.dtype,
                                    attn=spec.attn, backend=backend,
-                                   cache=cache, objective=objective)
+                                   cache=cache, objective=objective,
+                                   comm=spec.comm)
     raise TypeError(
         f"resolve() takes a GemmSpec or DecodeAttnSpec, got "
         f"{type(spec).__name__}")

@@ -40,7 +40,8 @@ def shape_bucket(m: int, n: int, k: int) -> tuple[int, int, int]:
 def cache_key(m: int, n: int, k: int, dtype: str, backend: str,
               batched: bool = False, objective: str = "time",
               epilogue: str | None = None,
-              attn: str | None = None) -> str:
+              attn: str | None = None,
+              comm: str | None = None) -> str:
     """Winner-cache key.  Non-default objectives get their own keyspace
     (``.../obj=edp``): a winner adjudicated on wall time must never be
     served to an energy- or EDP-optimising caller; ``"time"`` keeps the
@@ -57,7 +58,15 @@ def cache_key(m: int, n: int, k: int, dtype: str, backend: str,
     the kernel tag replaces the ``mm``/``bmm`` prefix with ``attn`` and
     the shape is (slots, kv_width, cache_len) -- a paged winner and a
     contiguous winner are different searches with different byte curves,
-    and neither may leak into the GEMM keyspace."""
+    and neither may leak into the GEMM keyspace.
+
+    ``comm`` (a :class:`repro.tune.cost.CommSpec` tag such as
+    ``tp8-h2.50``) is the mesh keyspace (DESIGN.md §15): the tag carries
+    the collective's ring size AND the mean hop distance of the mesh's
+    curve embedding, so winners scored under one placement's
+    bytes-over-links curve are never served to a mesh embedded along a
+    different curve.  Single-chip callers (``comm=None``) keep the
+    historical unsuffixed key."""
     bm_, bn_, bk_ = shape_bucket(m, n, k)
     tag = "attn" if attn else ("bmm" if batched else "mm")
     key = f"{tag}/{bm_}x{bn_}x{bk_}/{dtype}/{backend}"
@@ -67,6 +76,8 @@ def cache_key(m: int, n: int, k: int, dtype: str, backend: str,
         key += f"/ep={epilogue}"
     if attn:
         key += f"/attn={attn}"
+    if comm and comm != "none":
+        key += f"/comm={comm}"
     return key
 
 

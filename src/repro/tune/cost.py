@@ -36,8 +36,9 @@ from repro.core.locality import matmul_hbm_traffic
 from repro.core.schedule import grid_schedule, schedule_extra_kwargs
 
 __all__ = ["TuneConfig", "CostEstimate", "EpilogueSpec", "AttnSpec",
-           "predict", "predict_attn", "attn_decode_bytes",
-           "attn_decode_flops", "epilogue_extra_bytes", "epilogue_flops",
+           "CommSpec", "ring_allreduce_link_bytes", "predict",
+           "predict_attn", "attn_decode_bytes", "attn_decode_flops",
+           "epilogue_extra_bytes", "epilogue_flops",
            "vmem_block_capacity", "with_f_scale"]
 
 # scalar-unit rate used for index-decode overhead (matches benchmarks/common)
@@ -219,6 +220,67 @@ class AttnSpec:
         return tag
 
 
+def ring_allreduce_link_bytes(payload_bytes: float, ways: int,
+                              hops: float = 1.0) -> float:
+    """Modeled bytes-over-links of one ring all-reduce, per chip.
+
+    Reduce-scatter + all-gather each move ``(ways - 1) / ways`` of the
+    payload through every chip's outgoing link, hence the classic
+    ``2 * (w - 1) / w`` factor.  ``hops`` is the mean *physical* ICI
+    distance between logical ring neighbours under the mesh's curve
+    embedding (:func:`repro.launch.mesh.link_distance`): a neighbour
+    send that crosses ``hops`` torus links occupies ``hops`` links'
+    bandwidth and pays ``hops`` links' per-byte energy -- the
+    distance-weighted traffic term of the spatial-computer model
+    (PAPERS.md), and what makes placement a tunable quantity rather
+    than a no-op relabeling (DESIGN.md §15).
+    """
+    if ways <= 1:
+        return 0.0
+    return 2.0 * (ways - 1) / ways * float(payload_bytes) * float(hops)
+
+
+@dataclass(frozen=True)
+class CommSpec:
+    """The collective a tuned call implies on a multi-chip mesh
+    (DESIGN.md §15) -- the communication analogue of
+    :class:`EpilogueSpec`.
+
+    A row-parallel TP GEMM ends in an all-reduce of its (M, N) output
+    over the ``ways``-ray "model" axis; an SP decode-attention step ends
+    in the online-softmax psum.  ``ways`` is the ring size, ``hops`` the
+    mean physical ICI hop count between ring neighbours under the mesh's
+    curve embedding (:func:`repro.launch.mesh.link_distance`), ``axis``
+    the logical mesh axis for provenance.  ``comm=None`` everywhere is
+    the single-chip behaviour and keeps every existing cache key
+    byte-for-byte unchanged (the ``share=1.0`` discipline of
+    :class:`AttnSpec`).
+    """
+
+    ways: int
+    hops: float = 1.0
+    axis: str = "model"
+
+    def __post_init__(self):
+        if self.ways < 2:
+            raise ValueError(
+                f"CommSpec needs ways >= 2 (a 1-ray ring moves no "
+                f"bytes; pass comm=None), got {self.ways}")
+        if not self.hops > 0.0:
+            raise ValueError(f"hops must be > 0, got {self.hops!r}")
+
+    def tag(self) -> str:
+        """Stable cache-key form, e.g. ``tp8-h2.50``: winners are keyed
+        by ring size AND hop distance, so re-embedding the mesh along a
+        different curve re-adjudicates instead of serving a winner tuned
+        for another placement's byte curve."""
+        return f"tp{self.ways}-h{self.hops:.2f}"
+
+    def allreduce_link_bytes(self, payload_bytes: float) -> float:
+        return ring_allreduce_link_bytes(payload_bytes, self.ways,
+                                         self.hops)
+
+
 def attn_decode_bytes(spec: AttnSpec, *, slots: int, cache_len: int,
                       lengths=None, n_kv_heads: int, d_head: int,
                       dtype_bytes: int = 4) -> float:
@@ -277,6 +339,7 @@ def predict_attn(
     lengths=None,
     dtype_bytes: int = 4,
     hw=TPU_V5E,
+    comm: "CommSpec | None" = None,
 ) -> CostEstimate:
     """Cost estimate for one paged/contiguous decode-attention step at
     the candidate's DVFS point -- the attention analogue of
@@ -284,6 +347,10 @@ def predict_attn(
     (``repro.tune.autotune.resolve_attn_config``).  The gather is pure
     memory traffic (no LRU replay needed: each page moves exactly once),
     so the estimate is the roofline of the traffic model above.
+
+    ``comm`` adds the SP online-softmax combine (DESIGN.md §15): the
+    per-step psum of the f32 (o, l, m) partials -- ``slots * n_heads *
+    (d_head + 2)`` floats -- hop-weighted over the mesh's embedding.
     """
     flops = attn_decode_flops(slots=slots, cache_len=cache_len,
                               lengths=lengths, n_heads=n_heads,
@@ -291,13 +358,18 @@ def predict_attn(
     traffic = attn_decode_bytes(spec, slots=slots, cache_len=cache_len,
                                 lengths=lengths, n_kv_heads=n_kv_heads,
                                 d_head=d_head, dtype_bytes=dtype_bytes)
+    ici_bytes = comm.allreduce_link_bytes(
+        slots * n_heads * (d_head + 2) * 4.0) if comm else 0.0
     f = clamp_f_scale(hw, cfg.f_scale)
     t_compute = flops / (hw.peak_flops * f)
     t_hbm = traffic / hw.hbm_bw
-    return CostEstimate(cfg, max(t_compute, t_hbm), traffic,
+    t_ici = ici_bytes / hw.ici_bw
+    return CostEstimate(cfg, max(t_compute, t_hbm, t_ici), traffic,
                         t_compute, t_hbm, 0.0, flops,
+                        ici_bytes=ici_bytes, t_ici=t_ici,
                         extras={"attn": spec.tag(), "slots": slots,
-                                "cache_len": cache_len})
+                                "cache_len": cache_len,
+                                "comm": comm.tag() if comm else "none"})
 
 
 @dataclass(frozen=True)
@@ -309,6 +381,8 @@ class CostEstimate:
     t_hbm: float
     t_index: float
     flops: float = 0.0
+    ici_bytes: float = 0.0  # modeled bytes-over-links (CommSpec term)
+    t_ici: float = 0.0
     extras: dict = field(default_factory=dict)
 
 
@@ -342,6 +416,7 @@ def predict(
     max_sim_steps: int = 200_000,
     epilogue: EpilogueSpec | None = None,
     fuse_epilogue: bool = True,
+    comm: "CommSpec | None" = None,
 ) -> CostEstimate:
     """Model the time/traffic of ``cfg`` on an M x N x K GEMM.
 
@@ -355,6 +430,16 @@ def predict(
     bias is a tiled (1, bn) input, the residual streams once); the
     ``"xla"`` library baseline always pays the unfused dot-then-
     elementwise pipeline -- an extra full C round trip.
+
+    ``comm`` adds the collective the call implies on a multi-chip mesh
+    (DESIGN.md §15): a row-parallel TP GEMM's (M, N) output all-reduce,
+    hop-weighted by the mesh's curve embedding.  The term is identical
+    across kernel candidates (the collective doesn't care how the tiles
+    were walked) but NOT across DVFS points: ``time = max(t_compute,
+    t_hbm, t_ici) + t_index``, so once the collective is the roofline,
+    lowering f is time-free and the energy/EDP objectives slide down
+    the frequency grid -- the mechanism that moves winners (tested in
+    tests/test_comm_placement.py).
     """
     bm, bn, bk = cfg.bm, cfg.bn, cfg.bk
     mt = -(-m // bm)
@@ -367,6 +452,12 @@ def predict(
     # time once t_compute(f) crosses t_hbm
     f = clamp_f_scale(hw, cfg.f_scale)
     t_compute = flops / (hw.peak_flops * f)
+    # the output all-reduce moves the same bytes whatever the schedule;
+    # its time shares the roofline max (collectives overlap the k-loop
+    # at best, the flush at worst), its bytes feed the e_ici energy term
+    ici_bytes = comm.allreduce_link_bytes(m * n * dtype_bytes) \
+        if comm else 0.0
+    t_ici = ici_bytes / hw.ici_bw
 
     if cfg.schedule == "xla":
         # tuned-library baseline: assume near-roofline traffic (each
@@ -375,10 +466,12 @@ def predict(
         traffic = dtype_bytes * (m * k + k * n + m * n) \
             + epilogue_extra_bytes(ep, m, n, dtype_bytes, fused=False)
         t_hbm = traffic / hw.hbm_bw
-        return CostEstimate(cfg, max(t_compute, t_hbm), traffic,
+        return CostEstimate(cfg, max(t_compute, t_hbm, t_ici), traffic,
                             t_compute, t_hbm, 0.0, flops,
+                            ici_bytes=ici_bytes, t_ici=t_ici,
                             extras={"epilogue": ep.tag() if ep else "none",
-                                    "epilogue_fused": False})
+                                    "epilogue_fused": False,
+                                    "comm": comm.tag() if comm else "none"})
 
     if capacity is None:
         capacity = vmem_block_capacity(bm, bn, bk, dtype_bytes, hw=hw)
@@ -414,17 +507,20 @@ def predict(
 
     return CostEstimate(
         cfg,
-        max(t_compute, t_hbm) + t_index,
+        max(t_compute, t_hbm, t_ici) + t_index,
         traffic,
         t_compute,
         t_hbm,
         t_index,
         flops,
+        ici_bytes=ici_bytes,
+        t_ici=t_ici,
         extras={"misses": r["misses"] * scale, "probe_tiles": len(probe),
                 "grid": (mt, nt, kt), "capacity": capacity,
                 "epilogue": ep.tag() if ep else "none",
                 "epilogue_fused": bool(fuse_epilogue and ep),
-                "epilogue_bytes": ep_bytes},
+                "epilogue_bytes": ep_bytes,
+                "comm": comm.tag() if comm else "none"},
     )
 
 
@@ -433,9 +529,10 @@ def with_f_scale(est: CostEstimate, f_scale: float,
     """Re-derive ``est`` at a different DVFS point without re-simulating.
 
     Traffic is frequency-invariant; compute and index time scale as 1/f
-    (MXU and scalar unit on the core clock), memory time is untouched.
-    This is what lets the autotuner expand every kernel candidate over
-    the whole frequency grid at the cost of ONE LRU replay.
+    (MXU and scalar unit on the core clock), memory and link time are
+    untouched (HBM and ICI run on their own clocks).  This is what lets
+    the autotuner expand every kernel candidate over the whole frequency
+    grid at the cost of ONE LRU replay.
     """
     f_new = clamp_f_scale(hw, f_scale)
     f_old = clamp_f_scale(hw, est.config.f_scale)
@@ -447,7 +544,7 @@ def with_f_scale(est: CostEstimate, f_scale: float,
     return dataclasses.replace(
         est,
         config=dataclasses.replace(est.config, f_scale=f_new),
-        time=max(t_compute, est.t_hbm) + t_index,
+        time=max(t_compute, est.t_hbm, est.t_ici) + t_index,
         t_compute=t_compute,
         t_index=t_index,
     )

@@ -38,10 +38,15 @@ def estimate_energy(est: CostEstimate, hw=TPU_V5E,
     voltage-scaled dynamic-compute term: a lower frequency buys a
     quadratic core-energy discount, paid for in time only once the
     candidate goes compute-bound -- the paper's crossover mechanism.
+
+    ``est.ici_bytes`` (the hop-weighted collective traffic of a
+    :class:`~repro.tune.cost.CommSpec`-scored candidate, DESIGN.md §15)
+    feeds the ``e_ici`` term, so multi-chip winners are adjudicated on
+    bytes-over-links energy too, not just local HBM traffic.
     """
     t = wall_time if wall_time is not None else est.time
-    return energy_joules(est.flops, est.traffic_bytes, 0.0, 1, hw=hw,
-                         f_scale=est.config.f_scale, wall_time=t)
+    return energy_joules(est.flops, est.traffic_bytes, est.ici_bytes, 1,
+                         hw=hw, f_scale=est.config.f_scale, wall_time=t)
 
 
 def objective_value(est: CostEstimate, objective: str = "time", hw=TPU_V5E,

@@ -1,0 +1,242 @@
+"""SFC device placement + communication-cost tuner axis (DESIGN.md §15).
+
+Covers the PR's tentpole claims without touching jax device state (the
+multi-device lowering checks live in tests/test_distributed.py):
+
+* ``device_permutation`` is a validated bijection for every supported
+  order, and unknown orders raise (the silent row-major fallback bug);
+* the honest locality claim: on logical shapes that do NOT match the
+  physical torus, hilbert/morton embeddings beat row-major on mean
+  ring-neighbour hops, and never lose the per-axis comparison the smoke
+  CI asserts;
+* ``CommSpec`` threads through predict/cache_key/resolve: comm-scored
+  winners live in their own keyspace and (regression) the energy/EDP
+  winner CHANGES when the link term floors the time -- the whole point
+  of modelling it;
+* ``crosscheck_link_model``: the closed-form ring bytes agree with an
+  explicit step-by-step ring simulation within STATIC_DRIFT_TOL;
+* the sharding-fallback bugfixes: ``decode_state_specs`` replicates
+  (with a counter) instead of handing GSPMD an indivisible "model"
+  spec, and ``paged_decode_state_specs`` head-shards only when
+  divisible.
+"""
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.analysis.schedule import STATIC_DRIFT_TOL, crosscheck_link_model
+from repro.launch.mesh import (DEVICE_ORDERS, default_torus,
+                               device_permutation, link_distance,
+                               make_production_mesh)
+from repro.tune import (CommSpec, GemmSpec, TuneCache, cache_key, predict,
+                        resolve, ring_allreduce_link_bytes, TuneConfig)
+
+
+class FakeMesh:
+    """Duck-typed stand-in: link_distance/specs only read axis_names and
+    the shape mapping, so placement math is testable without devices."""
+
+    def __init__(self, shape: dict):
+        self.axis_names = tuple(shape)
+        self.shape = dict(shape)
+
+
+# --------------------------------------------------------- validation ------
+def test_unknown_device_order_raises():
+    """Bugfix: make_production_mesh used to silently fall back to
+    row-major for unknown orders; now every entry point validates."""
+    for fn in (lambda: make_production_mesh(device_order="zorder"),
+               lambda: device_permutation("zorder", 2, 4, list(range(8))),
+               lambda: link_distance(FakeMesh({"model": 8}),
+                                     device_order="zorder")):
+        with pytest.raises(ValueError, match="hilbert"):
+            fn()
+
+
+def test_device_permutation_validates_count():
+    with pytest.raises(ValueError, match="devices"):
+        device_permutation("hilbert", 4, 4, list(range(15)))
+
+
+def test_default_torus():
+    assert default_torus(256) == (16, 16)
+    assert default_torus(8) == (2, 4)
+    assert default_torus(4) == (2, 2)
+    with pytest.raises(ValueError):
+        default_torus(6)
+
+
+# ------------------------------------------------ bijection property -------
+@settings(max_examples=30)
+@given(
+    order=st.sampled_from([o for o in DEVICE_ORDERS if o != "rowmajor"]),
+    logr=st.integers(min_value=0, max_value=4),
+    logc=st.integers(min_value=0, max_value=4),
+)
+def test_device_permutation_is_bijection(order, logr, logc):
+    """Property (satellite): every curve permutation over a power-of-two
+    torus hands each device exactly one logical rank."""
+    rows, cols = 1 << logr, 1 << logc
+    devices = list(range(rows * cols))
+    perm = device_permutation(order, rows, cols, devices)
+    assert sorted(perm) == devices
+
+
+def test_rowmajor_permutation_is_identity():
+    devs = list(range(8))
+    assert device_permutation("rowmajor", 2, 4, devs) == devs
+
+
+# ------------------------------------------------- locality claims ---------
+def _mean_hops(order, logical, torus):
+    mesh = FakeMesh(dict(zip(("data", "model"), logical)))
+    return link_distance(mesh, device_order=order, torus=torus)
+
+
+@pytest.mark.parametrize("logical", [(32, 8), (64, 4)])
+def test_sfc_beats_rowmajor_on_mismatched_logical_shape(logical):
+    """The production claim: a (data, model) mesh whose axes do not
+    coincide with the 16x16 torus steps between physically nearer chips
+    under either curve, on BOTH axes (never a per-axis regression)."""
+    torus = (16, 16)
+    rm = _mean_hops("rowmajor", logical, torus)
+    for curve in ("hilbert", "morton"):
+        cv = _mean_hops(curve, logical, torus)
+        for ax in ("data", "model"):
+            assert cv[ax] <= rm[ax], (curve, ax, cv, rm)
+        assert sum(cv.values()) < sum(rm.values()), (curve, cv, rm)
+
+
+def test_rowmajor_optimal_when_logical_matches_torus():
+    """The honest half of the claim (module docstring): when the logical
+    shape IS the torus shape, row-major is the identity embedding and
+    the curves cannot beat its 1-hop rings."""
+    rm = _mean_hops("rowmajor", (16, 16), (16, 16))
+    assert rm == {"data": 1.0, "model": 1.0}
+    for curve in ("hilbert", "morton"):
+        cv = _mean_hops(curve, (16, 16), (16, 16))
+        assert sum(cv.values()) >= sum(rm.values())
+
+
+def test_smoke_mesh_placement_wins():
+    """The exact configuration the CI distributed job asserts on: a
+    logical (4, 2) mesh on the 8-chip (2, 4) torus."""
+    rm = _mean_hops("rowmajor", (4, 2), (2, 4))
+    for curve in ("hilbert", "morton"):
+        cv = _mean_hops(curve, (4, 2), (2, 4))
+        assert sum(cv.values()) < sum(rm.values()), (curve, cv, rm)
+
+
+def test_link_distance_pod_axis_is_dcn():
+    ld = link_distance(FakeMesh({"pod": 2, "data": 2, "model": 2}),
+                       device_order="hilbert")
+    assert ld["pod"] == 0.0
+    assert ld["model"] > 0.0
+
+
+# ------------------------------------------------------ CommSpec -----------
+def test_commspec_validation_and_tag():
+    c = CommSpec(ways=8, hops=4.25)
+    assert c.tag() == "tp8-h4.25"
+    with pytest.raises(ValueError):
+        CommSpec(ways=1)
+    with pytest.raises(ValueError):
+        CommSpec(ways=4, hops=0.0)
+
+
+def test_ring_allreduce_link_bytes():
+    # 2(w-1)/w * payload * hops; degenerate ring sends nothing
+    assert ring_allreduce_link_bytes(1000, 1) == 0.0
+    assert ring_allreduce_link_bytes(1000, 4) == pytest.approx(1500.0)
+    assert ring_allreduce_link_bytes(1000, 4, 2.0) == pytest.approx(3000.0)
+
+
+def test_crosscheck_link_model_within_tol():
+    """Analysis satellite: explicit ring simulation vs closed form."""
+    for ways, hops in ((2, 1.0), (8, 1.0), (8, 4.25), (16, 2.5)):
+        rep = crosscheck_link_model(1 << 20, ways, hops=hops)
+        assert rep.ok, rep.violations
+        assert rep.stats["rel_drift"] <= STATIC_DRIFT_TOL
+
+
+def test_predict_comm_term():
+    c = CommSpec(ways=8, hops=4.25)
+    e0 = predict(TuneConfig(schedule="hilbert"), 1024, 1024, 1024, 4)
+    e1 = predict(TuneConfig(schedule="hilbert"), 1024, 1024, 1024, 4,
+                 comm=c)
+    assert e0.ici_bytes == 0.0 and e0.t_ici == 0.0
+    assert e1.ici_bytes == pytest.approx(
+        ring_allreduce_link_bytes(1024 * 1024 * 4, 8, 4.25))
+    assert e1.time >= e0.time
+    assert e1.extras["comm"] == "tp8-h4.25"
+
+
+def test_cache_key_comm_keyspace():
+    base = cache_key(512, 512, 512, "float32", "cpu")
+    tagged = cache_key(512, 512, 512, "float32", "cpu", comm="tp8-h4.25")
+    assert tagged == base + "/comm=tp8-h4.25"
+    # comm=None / "none" keep historical keys byte-identical
+    assert cache_key(512, 512, 512, "float32", "cpu", comm=None) == base
+    assert cache_key(512, 512, 512, "float32", "cpu", comm="none") == base
+
+
+def test_resolve_winner_changes_with_comm(tmp_path):
+    """Acceptance regression: on a TP-sharded shape the energy winner
+    under the comm term differs from the single-chip winner -- the link
+    time floors wall time, so a lower DVFS point becomes free and the
+    tuner takes the quadratic core-energy discount."""
+    cache = TuneCache(str(tmp_path / "tune.json"))
+    comm = CommSpec(ways=8, hops=4.25)
+    r0 = resolve(GemmSpec(512, 2048, 2048), cache=cache,
+                 objective="energy", search=True, measure=False)
+    r1 = resolve(GemmSpec(512, 2048, 2048, comm=comm), cache=cache,
+                 objective="energy", search=True, measure=False)
+    assert r0.key != r1.key
+    assert r1.key.endswith("/comm=tp8-h4.25")
+    assert r0.config != r1.config, (r0.config, r1.config)
+    assert r1.config.f_scale < r0.config.f_scale
+
+
+# ------------------------------------------- sharding fallback fixes -------
+def _counter(name):
+    from repro.obs.metrics import default_registry
+    return default_registry().counter(name)
+
+
+def test_decode_state_specs_indivisible_fallback_replicates():
+    """Bugfix regression: cache_len that neither the SP axes nor the
+    model axis divides must replicate (counted), never emit an invalid
+    ("model",) spec."""
+    from repro.distributed.sharding import decode_state_specs
+    from repro.configs import get_smoke_config
+
+    cfg = get_smoke_config("qwen3_1_7b")
+    mesh = FakeMesh({"pod": 2, "data": 2, "model": 2})
+    # batch 8 divides dp (4) -> seq axes ("model",); cache_len 33 is odd
+    before = _counter("distributed.seq_shard_fallback_replicated").value
+    s = decode_state_specs(cfg, mesh, 8, 33)
+    after = _counter("distributed.seq_shard_fallback_replicated").value
+    assert tuple(s["k"])[2] is None, s["k"]
+    assert after == before + 1
+    # divisible cache_len keeps the historical sharded spec, no counter
+    s2 = decode_state_specs(cfg, mesh, 8, 32)
+    assert tuple(s2["k"])[2] == "model", s2["k"]
+    assert _counter(
+        "distributed.seq_shard_fallback_replicated").value == after
+
+
+def test_paged_specs_shard_kv_heads_when_divisible():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_smoke_config
+    from repro.distributed.sharding import paged_decode_state_specs
+
+    cfg = get_smoke_config("qwen3_1_7b")  # n_kv_heads=2
+    s = paged_decode_state_specs(cfg, FakeMesh({"data": 4, "model": 2}))
+    assert s["k_pages"] == P(None, None, "model", None)
+    assert s["block_tables"] == P() and s["page_perm"] == P()
+    # indivisible heads: replicated + counted, never a wrong-axis shard
+    before = _counter("distributed.paged_kv_replicated").value
+    s2 = paged_decode_state_specs(cfg, FakeMesh({"data": 1, "model": 8}))
+    assert s2["k_pages"] == P()
+    assert _counter("distributed.paged_kv_replicated").value == before + 1

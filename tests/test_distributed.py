@@ -5,13 +5,17 @@ be set before jax initializes -- so every check runs in its own
 subprocess via ``repro.launch.selftest`` (see that module for the actual
 assertions: DP/TP == single-device, SP decode == local decode, EP MoE ==
 capacity dispatch, EF-compressed pod sync convergence, checkpoint +
-elastic reshard, train.py failure/resume).
+elastic reshard, train.py failure/resume, kv-head-sharded paged decode
+== replicated pool).
 """
+import json
 import os
 import subprocess
 import sys
 
 import pytest
+
+from _hyp import given, settings, st
 
 # the multi-step system checks (full train loops in subprocesses) ride
 # the slow tier; the single-step correctness gates -- dp*tp parity
@@ -25,13 +29,15 @@ CHECKS = [
     "checkpoint_elastic_reshard",
     pytest.param("train_cli_with_failure", marks=pytest.mark.slow),
     "pipeline_parallel_matches_sequential",
+    "paged_sharded_matches_replicated",
 ]
 
 
-def _run(check):
+def _run(check, extra_env=None):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.update(extra_env or {})
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.selftest", check],
         capture_output=True, text=True, timeout=900, env=env)
@@ -44,3 +50,22 @@ def _run(check):
 @pytest.mark.parametrize("check", CHECKS)
 def test_distributed(check):
     _run(check)
+
+
+@pytest.mark.slow
+@settings(max_examples=4, deadline=None)
+@given(n_slots=st.integers(min_value=1, max_value=3), data=st.data())
+def test_paged_sharded_parity_property(n_slots, data):
+    """Hypothesis replay through the sharded path (DESIGN.md §15): the
+    drawn ragged schedules of the PR 5 paged-parity harness, shipped to
+    the selftest subprocess via REPRO_PARITY_SPEC, must hold with the
+    pool kv-head-sharded just as they do single-device."""
+    prompts = [
+        data.draw(st.lists(st.integers(min_value=2, max_value=100),
+                           min_size=1, max_size=9), label=f"prompt{s}")
+        for s in range(n_slots)
+    ]
+    steps = data.draw(st.integers(min_value=1, max_value=2), label="steps")
+    spec = json.dumps({"prompts": prompts, "steps": steps})
+    _run("paged_sharded_matches_replicated",
+         extra_env={"REPRO_PARITY_SPEC": spec})
